@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing, CSV row emission, CPU ceiling."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_call(fn: Callable, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+_CPU_CEILING = None
+
+
+def cpu_memcpy_ceiling_gbps() -> float:
+    """Measured single-thread memcpy bandwidth — the container's 'link'."""
+    global _CPU_CEILING
+    if _CPU_CEILING is None:
+        a = np.random.default_rng(0).standard_normal(1 << 21)  # 16 MB
+        b = np.empty_like(a)
+        t = time_call(lambda: b.__setitem__(slice(None), a), repeats=9)
+        _CPU_CEILING = a.nbytes / t / 1e9
+    return _CPU_CEILING

@@ -1,0 +1,50 @@
+"""Paper Figs 13-14 (PetaLinux / managed runtime) + polled-vs-interrupt.
+
+Compares POLLED (caller blocks) vs INTERRUPT (callback) completion and the
+XDMA-flavor ChannelPool vs the QDMA-flavor QueueEngine (scheduler thread =
+the 'managed runtime' overhead the paper attributes to PetaLinux designs).
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.channels import ChannelPool, CompletionMode, Direction
+from repro.core.engine import MemoryEngine
+
+SIZE = 1 << 22
+
+
+def run(quick: bool = False) -> None:
+    size = (1 << 20) if quick else SIZE
+    host = np.random.default_rng(0).standard_normal(size // 8)
+
+    with ChannelPool(2, chunk_bytes=1 << 20) as pool:
+        t_poll = time_call(lambda: pool.submit(
+            host, Direction.H2C, mode=CompletionMode.POLLED).wait(),
+            repeats=3)
+
+        def interrupt_once():
+            done = threading.Event()
+            pool.submit(host, Direction.H2C,
+                        mode=CompletionMode.INTERRUPT,
+                        on_complete=lambda tr: done.set())
+            done.wait()
+        t_intr = time_call(interrupt_once, repeats=3)
+    emit("fig13_polled_h2c", t_poll * 1e6,
+         f"{size/t_poll/1e9:.2f}GB/s")
+    emit("fig13_interrupt_h2c", t_intr * 1e6,
+         f"{size/t_intr/1e9:.2f}GB/s overhead="
+         f"{(t_intr/t_poll-1)*100:.1f}%")
+
+    for flavor in ("xdma", "qdma"):
+        with MemoryEngine(n_channels=2, flavor=flavor) as eng:
+            t = time_call(lambda: eng.write(host).wait(), repeats=3)
+            emit(f"fig14_{flavor}_managed_h2c", t * 1e6,
+                 f"{size/t/1e9:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Figs 11-12 (MicroBlaze contention): DMA under concurrent compute.
+
+The paper's second AXI master is, on TPU, simply compute sharing HBM with
+the DMA engines.  We measure ChannelPool bandwidth with and without a jit'd
+matmul loop running concurrently and report the degradation factor, next to
+the paper's measured 10.8 -> 9.5 GB/s (x0.88) single-channel drop.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.analytical import paper_pcie_ddr4
+from repro.core.channels import ChannelPool, Direction
+
+SIZE = 1 << 22
+
+
+def run(quick: bool = False) -> None:
+    size = (1 << 20) if quick else SIZE
+    host = np.random.default_rng(0).standard_normal(size // 8)
+    stop = threading.Event()
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    mm = jax.jit(lambda a: a @ a)
+
+    def burn():
+        a = w
+        while not stop.is_set():
+            a = mm(a)
+            a.block_until_ready()
+
+    for nch in (1, 4):
+        with ChannelPool(nch, chunk_bytes=1 << 20) as pool:
+            t_idle = time_call(lambda: pool.h2c(host).wait(), repeats=3)
+            th = threading.Thread(target=burn, daemon=True)
+            stop.clear()
+            th.start()
+            t_busy = time_call(lambda: pool.h2c(host).wait(), repeats=3)
+            stop.set()
+            th.join(timeout=5)
+            factor = t_idle / t_busy
+            emit(f"fig11_contention_ch{nch}", t_busy * 1e6,
+                 f"idle={size/t_idle/1e9:.2f}GB/s busy="
+                 f"{size/t_busy/1e9:.2f}GB/s factor={factor:.2f} "
+                 f"paper_factor={paper_pcie_ddr4().contention_factor}")
+
+
+if __name__ == "__main__":
+    run()

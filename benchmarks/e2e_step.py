@@ -1,0 +1,60 @@
+"""End-to-end step benches: train step + serve decode throughput (smoke
+configs, CPU) and the roofline summary read from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+from glob import glob
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import lm
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run(quick: bool = False) -> None:
+    archs = ["qwen2-0.5b"] if quick else ["qwen2-0.5b", "rwkv6-1.6b",
+                                          "recurrentgemma-2b"]
+    for arch in archs:
+        cfg = reduce_for_smoke(get_config(arch))
+        params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(0))
+        opt = AdamW(lr=1e-3)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        rng = np.random.default_rng(0)
+        B, S = 2, 64
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                       jnp.int32)}
+        step = jax.jit(lm.make_train_step(cfg, opt))
+
+        def one():
+            nonlocal state
+            state, _ = step(state, batch)
+            jax.block_until_ready(state["step"])
+        t = time_call(one, repeats=3)
+        toks = B * S
+        emit(f"e2e_train_step_{arch}", t * 1e6,
+             f"{toks/t:.0f} tok/s (smoke cfg)")
+
+    # roofline summary from artifacts (if the dry-run has been run)
+    for path in sorted(glob(os.path.join(ART, "single", "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        emit(f"roofline_{rec['arch']}_{rec['shape']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

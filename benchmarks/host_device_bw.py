@@ -1,0 +1,54 @@
+"""Paper Figs 9, 10, 15-18: host<->device bandwidth vs size x channels.
+
+Measures the NMA ChannelPool on this container (CPU memcpy-class numbers)
+and projects each point onto the paper's Alveo DDR4 path and the TPU v5e
+host path via the analytical model (core/analytical.py).  The shape of the
+curves — rising flank, multi-channel aggregation, C2H/H2C asymmetry — is
+the reproduced result; absolute GB/s on real hardware comes from the model
+anchored to the paper's measurements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cpu_memcpy_ceiling_gbps, emit, time_call
+from repro.core.analytical import (bandwidth_gbps, paper_pcie_ddr4,
+                                   project, tpu_host_path)
+from repro.core.channels import ChannelPool, Direction
+
+SIZES = [1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24]   # 64KB..16MB
+CHANNELS = [1, 2, 4]
+
+
+def run(quick: bool = False) -> None:
+    sizes = SIZES[1:4] if quick else SIZES
+    ceiling = cpu_memcpy_ceiling_gbps()
+    model = paper_pcie_ddr4()
+    tpu = tpu_host_path()
+    for nch in CHANNELS:
+        with ChannelPool(nch, chunk_bytes=1 << 20) as pool:
+            for size in sizes:
+                rows = size // 256
+                host = np.random.default_rng(0).integers(
+                    0, 255, size=(rows, 64), dtype=np.int32)
+                for direction in (Direction.H2C, Direction.C2H):
+                    if direction == Direction.C2H:
+                        dev = pool.h2c(host).wait()
+                        fn = lambda: pool.c2h(dev).wait()
+                    else:
+                        fn = lambda: pool.h2c(host).wait()
+                    t = time_call(fn, repeats=3)
+                    meas = size / t / 1e9
+                    proj_paper = project(meas, ceiling, model, size, nch,
+                                         direction)
+                    proj_tpu = project(meas, ceiling, tpu, size, nch,
+                                       direction)
+                    emit(f"fig9_10_bw_{direction.value}_ch{nch}_"
+                         f"{size >> 10}KB",
+                         t * 1e6,
+                         f"meas={meas:.2f}GB/s proj_alveo="
+                         f"{proj_paper:.1f} proj_tpu={proj_tpu:.1f}")
+
+
+if __name__ == "__main__":
+    run()

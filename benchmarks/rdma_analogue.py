@@ -1,0 +1,74 @@
+"""Paper Figs 19-20 (RDMA read/write): the device<->device ICI path.
+
+RDMA on the SoC SmartNIC is the 'easy API on a separate link' path; on a
+TPU pod that's ICI device<->device transfer.  This bench runs in a
+subprocess with 8 host devices and measures jax.device_put between devices
+(write analogue) and cross-device gather (read analogue), projecting onto
+the ICI model.  Reproduces the paper's qualitative finding: the
+RDMA/ICI-style path is slower than the raw DMA path but trivial to use.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, jax.numpy as jnp
+import numpy as np
+
+out = []
+for size in SIZES:
+    n = size // 4
+    x = jnp.zeros((n,), jnp.float32)
+    d0, d1 = jax.devices()[0], jax.devices()[1]
+    x = jax.device_put(x, d0)
+    x.block_until_ready()
+    # write analogue: push to remote device
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        y = jax.device_put(x, d1)
+        y.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    t_w = float(np.median(ts))
+    # read analogue: pull back
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        z = jax.device_put(y, d0)
+        z.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    t_r = float(np.median(ts))
+    out.append({"size": size, "t_write": t_w, "t_read": t_r})
+print(json.dumps(out))
+"""
+
+
+def run(quick: bool = False) -> None:
+    sizes = [1 << 18, 1 << 20] if quick else [1 << 18, 1 << 20, 1 << 22]
+    code = f"SIZES = {sizes}\n" + _CHILD
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    rows = json.loads(res.stdout.strip().splitlines()[-1])
+    from repro.core.analytical import bandwidth_gbps, tpu_ici_path
+    from repro.core.channels import Direction
+    ici = tpu_ici_path()
+    for r in rows:
+        size = r["size"]
+        for op, t in (("write", r["t_write"]), ("read", r["t_read"])):
+            proj = bandwidth_gbps(ici, size, 1, Direction.C2H)
+            emit(f"fig19_20_rdma_{op}_{size >> 10}KB", t * 1e6,
+                 f"meas={size/t/1e9:.2f}GB/s ici_model={proj:.1f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks sweeps
+(used by CI/tests); full mode is the default for the report in
+EXPERIMENTS.md §Benchmarks.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (completion_modes, contention, e2e_step,
+                        host_device_bw, offload_step, rdma_analogue,
+                        vmem_stream)
+
+MODULES = [
+    ("fig8_vmem_stream", vmem_stream),
+    ("fig9_18_host_device_bw", host_device_bw),
+    ("fig11_12_contention", contention),
+    ("fig13_14_completion_modes", completion_modes),
+    ("fig19_20_rdma_analogue", rdma_analogue),
+    ("tab1_offload_step", offload_step),
+    ("e2e_and_roofline", e2e_step),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run(quick=args.quick)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Pallas kernel tour: flash attention, tiered stream copy, RG-LRU scan.
+
+Each kernel runs in interpret mode (CPU container) against its pure-jnp
+oracle; on a real TPU pass interpret=False (the ops.py default).
+
+    PYTHONPATH=src python examples/pallas_kernels.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (GQA, causal)
+    q = jax.random.normal(key, (2, 256, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (2, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, block_q=128, block_k=128,
+                              interpret=True)
+    ref = ops.attention_ref(q, k, v)
+    print(f"flash_attention: out {out.shape}, max|err| "
+          f"{float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+    # stream copy: the paper's multi-buffered DMA pipeline on HBM<->VMEM
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    for nb in (1, 2, 4):
+        y = ops.stream_copy(x, block_rows=64, n_buffers=nb, interpret=True)
+        assert bool(jnp.all(y == x))
+    print("stream_copy: identity holds for 1/2/4 in-flight buffers "
+          "(buffers = the paper's DMA channel count)")
+
+    # RG-LRU blocked scan
+    a = jax.random.uniform(key, (2, 128, 256), jnp.float32, 0.8, 0.999)
+    b = jax.random.normal(key, (2, 128, 256), jnp.float32)
+    h = ops.rg_lru_scan(a, b, block_t=32, block_w=256, interpret=True)
+    href = ops.rg_lru_scan_ref(a, b)
+    print(f"rg_lru_scan: out {h.shape}, max|err| "
+          f"{float(jnp.max(jnp.abs(h - href))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

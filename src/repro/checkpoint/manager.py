@@ -1,0 +1,171 @@
+"""Sharded, resharding-safe checkpointing with async C2H drains.
+
+Layout per step: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf
+(flattened key path as filename) plus ``manifest.json`` (step, tree
+structure, shapes/dtypes, integrity digests).  Writes go to ``step_<N>.tmp``
+and are atomically renamed, so a crash mid-save never corrupts the latest
+checkpoint — the restore path simply picks the newest *complete* manifest.
+
+The device->host snapshot streams through the NMA engine's C2H channels
+(``MemoryEngine.read_tree_async``), then a background thread persists it —
+training resumes while bytes drain, the paper's C2H pattern (DESIGN.md §3.2).
+
+Arrays are saved *unsharded* (global view), so restore works under any mesh
+or world size — this is what makes elastic restarts trivial.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.engine import MemoryEngine
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "leaf"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 engine: Optional[MemoryEngine] = None, digest: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.engine = engine or MemoryEngine(n_channels=2)
+        self.digest = digest
+        os.makedirs(directory, exist_ok=True)
+        self._save_thread: Optional[threading.Thread] = None
+        self._save_error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, block: bool = True) -> None:
+        self.wait()  # one async save at a time
+        leaves_dev, treedef = jax.tree.flatten_with_path(tree)
+        paths = [p for p, _ in leaves_dev]
+        join = self.engine.read_tree_async([l for _, l in leaves_dev])
+
+        def persist():
+            try:
+                host_leaves = join()
+                self._write(step, paths, host_leaves, treedef)
+            except BaseException as e:  # surfaced on next wait()
+                self._save_error = e
+
+        self._save_thread = threading.Thread(target=persist, daemon=True)
+        self._save_thread.start()
+        if block:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._save_thread is not None:
+            self._save_thread.join()
+            self._save_thread = None
+        if self._save_error is not None:
+            e, self._save_error = self._save_error, None
+            raise e
+
+    def _write(self, step: int, paths, host_leaves, treedef) -> None:
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": [],
+        }
+        names = set()
+        for path, leaf in zip(paths, host_leaves):
+            arr = np.asarray(leaf)
+            name = _leaf_name(path)
+            assert name not in names, f"duplicate leaf name {name}"
+            names.add(name)
+            # raw bytes + manifest dtype: np.save cannot round-trip
+            # ml_dtypes (bfloat16) through its descr encoding
+            np.save(os.path.join(tmp, name + ".npy"),
+                    arr.reshape(-1).view(np.uint8))
+            entry = {"name": name, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)}
+            if self.digest:
+                entry["sha256"] = hashlib.sha256(
+                    arr.tobytes()).hexdigest()[:16]
+            manifest["leaves"].append(entry)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_") and not n.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, n,
+                                                "manifest.json")):
+                out.append(int(n[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any]:
+        """Restore into the structure of ``like`` (abstract or concrete).
+
+        Verifies digests; raises on corruption so the caller's fault
+        handler can fall back to an older step (runtime/fault.py).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        leaves_like, treedef = jax.tree.flatten_with_path(like)
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(leaves_like))
+        out = []
+        for (path, leaf), sh in zip(leaves_like, shard_leaves):
+            name = _leaf_name(path)
+            if name not in by_name:
+                raise KeyError(f"leaf {name} missing from checkpoint {step}")
+            e = by_name[name]
+            raw = np.load(os.path.join(d, name + ".npy"))
+            if self.digest and "sha256" in e:
+                h = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
+                if h != e["sha256"]:
+                    raise IOError(f"digest mismatch for {name} @ step {step}")
+            import jax.numpy as jnp
+            arr = raw.view(jnp.dtype(e["dtype"])).reshape(e["shape"])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch {name}: ckpt {arr.shape} "
+                                 f"vs model {leaf.shape}")
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.device_put(arr))
+        return step, jax.tree.unflatten(treedef, out)

@@ -1,0 +1,23 @@
+"""NMA: the paper's host<->accelerator memory-access engine (DESIGN.md §2-3).
+
+Public API:
+    Descriptor, SGList, gather, spans_for_packing   (scatter-gather model)
+    Channel, ChannelPool, Direction, CompletionMode (XDMA multi-channel)
+    FunctionQueue, QueueEngine                      (QDMA queue model)
+    MemoryEngine                                    (unified facade)
+    HostOffloadedOptimizer, KVPager                 (production offload paths)
+"""
+from repro.core.channels import (Channel, ChannelPool, CompletionMode,
+                                 Direction, Transfer)
+from repro.core.descriptors import (Descriptor, SGList, gather,
+                                    spans_for_packing)
+from repro.core.engine import MemoryEngine
+from repro.core.offload import HostOffloadedOptimizer, KVPager
+from repro.core.queues import FunctionQueue, QueueEngine
+
+__all__ = [
+    "Channel", "ChannelPool", "CompletionMode", "Direction", "Transfer",
+    "Descriptor", "SGList", "gather", "spans_for_packing",
+    "MemoryEngine", "HostOffloadedOptimizer", "KVPager",
+    "FunctionQueue", "QueueEngine",
+]

@@ -1,0 +1,39 @@
+"""Memory-tier registry: the BRAM/DRAM/host-DRAM hierarchy mapped to TPU.
+
+Paper (Figs 1-2, 7): on-chip BRAM/URAM, on-board DDR4, host DRAM, linked by
+AXI + PCIe with per-segment bandwidth ceilings.  TPU v5e analogue below;
+capacities/bandwidths are parameters so benches can model other parts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class Tier:
+    name: str
+    capacity_bytes: int
+    bw_gbps: float          # sustained bandwidth to the adjacent tier
+    latency_us: float
+
+
+# TPU v5e (target part; HBM bw & ICI from the task spec, VMEM size approx.)
+TPU_V5E = {
+    "vmem": Tier("vmem", 128 << 20, 819.0 * 8, 0.1),   # on-chip, ~HBM x8
+    "hbm": Tier("hbm", 16 << 30, 819.0, 1.0),
+    "host": Tier("host", 512 << 30, 32.0, 5.0),        # PCIe Gen4 x16
+    "ici": Tier("ici", 0, 50.0, 2.0),                  # per-link, per spec
+}
+
+# Paper hardware (Alveo U250, §6 Fig 7) — used to validate the analytical
+# model against the paper's measured numbers.
+ALVEO_U250 = {
+    "bram": Tier("bram", 2 << 20, 16.0, 0.05),         # AXI fabric ceiling
+    "ddr4": Tier("ddr4", 16 << 30, 19.2, 0.3),
+    "pcie": Tier("pcie", 0, 15.8, 1.0),                # Gen3 x16
+}
+
+
+def get_part(name: str) -> Dict[str, Tier]:
+    return {"tpu_v5e": TPU_V5E, "alveo_u250": ALVEO_U250}[name]

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for all Pallas kernels.
+
+On this container the kernels execute with ``interpret=True`` (CPU); on a
+real TPU set ``interpret=False`` (default chosen from the backend).  The
+model stack routes through these when ``ModelConfig.use_pallas`` is set.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rg_lru import rg_lru_scan as _rg_lru
+from repro.kernels.streamcopy import stream_copy as _stream_copy
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    logit_cap: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  logit_cap=logit_cap, block_q=block_q, block_k=block_k,
+                  interpret=interp)
+
+
+def stream_copy(x, *, block_rows: int = 256, n_buffers: int = 2,
+                interpret: Optional[bool] = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _stream_copy(x, block_rows=block_rows, n_buffers=n_buffers,
+                        interpret=interp)
+
+
+def rg_lru_scan(a, b, h0=None, *, block_t: int = 64, block_w: int = 256,
+                interpret: Optional[bool] = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _rg_lru(a, b, h0, block_t=block_t, block_w=block_w,
+                   interpret=interp)
+
+
+# re-export oracles for test convenience
+attention_ref = ref.attention_ref
+stream_copy_ref = ref.stream_copy_ref
+rg_lru_scan_ref = ref.rg_lru_scan_ref

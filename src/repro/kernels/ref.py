@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  logit_cap: Optional[float] = None) -> jax.Array:
+    """Dense softmax attention. q: (B,S,H,dh); k,v: (B,S,KV,dh)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qg = q.reshape(B, S, KV, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    s = jnp.where(m[None, None, None], s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, dh)
+
+
+def stream_copy_ref(x: jax.Array) -> jax.Array:
+    """Oracle for the tiered stream copy: identity."""
+    return x + jnp.zeros_like(x)
+
+
+def rg_lru_scan_ref(a: jax.Array, bx: jax.Array,
+                    h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + bx_t along axis 1. a, bx: (B, T, W) fp32."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h

@@ -1,0 +1,91 @@
+"""Tiered stream copy: HBM -> VMEM -> HBM with N in-flight DMA buffers.
+
+This is the paper's core mechanism transplanted to the TPU memory hierarchy
+(DESIGN.md §2): an explicit multi-buffered DMA pipeline where ``n_buffers``
+plays the role of XDMA channel count and ``block_rows`` the transfer
+(chunk) size.  The benchmark sweep over (size x buffers) reproduces the
+shape of Figs 8-10/15-18 on the HBM<->VMEM segment.
+
+Hazard discipline per VMEM slot s and block i (slot = i % n_buffers):
+  wait get(i) -> start put(i) -> before get(i + n_buffers) reuses s,
+  wait put(i).  With n_buffers >= 2 the inbound DMA of block i+1 overlaps
+  the outbound DMA of block i — double buffering; more buffers deepen the
+  pipeline exactly like extra DMA channels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stream_copy_kernel(src, dst, *scratch, block_rows: int, n_blocks: int,
+                        n_buffers: int):
+    bufs = scratch[:n_buffers]
+    in_sems = scratch[n_buffers:2 * n_buffers]
+    out_sems = scratch[2 * n_buffers:3 * n_buffers]
+
+    def get_copy(slot, i):
+        return pltpu.make_async_copy(
+            src.at[pl.ds(i * block_rows, block_rows)], bufs[slot],
+            in_sems[slot])
+
+    def put_copy(slot, i):
+        return pltpu.make_async_copy(
+            bufs[slot], dst.at[pl.ds(i * block_rows, block_rows)],
+            out_sems[slot])
+
+    # warm-up: fill the pipeline
+    for s in range(min(n_buffers, n_blocks)):
+        get_copy(s, s).start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, n_buffers)
+
+        def per_slot(s):
+            get_copy(s, i).wait()
+            put_copy(s, i).start()
+
+            nxt = i + n_buffers
+
+            @pl.when(nxt < n_blocks)
+            def _prefetch():
+                put_copy(s, i).wait()          # slot free before reuse
+                get_copy(s, nxt).start()
+
+            @pl.when(nxt >= n_blocks)
+            def _drainwait():
+                put_copy(s, i).wait()
+
+        # dispatch on the (traced) slot index with static branches
+        jax.lax.switch(slot, [functools.partial(per_slot, s)
+                              for s in range(n_buffers)])
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "n_buffers",
+                                             "interpret"))
+def stream_copy(x: jax.Array, *, block_rows: int = 256,
+                n_buffers: int = 2, interpret: bool = False) -> jax.Array:
+    """Copy a (R, C) array through VMEM in ``block_rows`` tiles."""
+    R, C = x.shape
+    assert R % block_rows == 0, (R, block_rows)
+    n_blocks = R // block_rows
+
+    kernel = functools.partial(_stream_copy_kernel, block_rows=block_rows,
+                               n_blocks=n_blocks, n_buffers=n_buffers)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        scratch_shapes=(
+            [pltpu.VMEM((block_rows, C), x.dtype)] * n_buffers
+            + [pltpu.SemaphoreType.DMA] * (2 * n_buffers)),
+        interpret=interpret,
+    )(x)

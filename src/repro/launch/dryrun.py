@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init (task spec).  This module is the only place that forces
+512 placeholder devices; tests and benches see the real device.
+
+Per cell:
+  1. full-config compile (scan over layers): proves the sharding config is
+     coherent on the production mesh, yields ``memory_analysis()``.
+  2. (single-pod only) two-point unrolled cost lowerings at p and 2p layers
+     -> exact FLOPs / bytes / collective-bytes, extrapolated linearly to L
+     (XLA counts while-loop bodies once; DESIGN.md §6).
+  3. JSON artifact in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.hlo import total_collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import serve_specs, train_specs, with_layers
+from repro.launch.traffic import modeled_bytes
+from repro.models import lm
+from repro.optim.adamw import for_arch
+from repro.sharding import SERVE_RULES, TRAIN_RULES, ShardCtx
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# v5e roofline constants (task spec)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def _mem_dict(ma) -> dict:
+    return {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")}
+
+
+def _build(cfg, shape, mesh, kind, unrolled):
+    """Returns (jitted_fn, abstract_args)."""
+    if kind == "train":
+        ctx = ShardCtx(mesh, TRAIN_RULES)
+        opt = for_arch(cfg.arch_id)
+        (state_ab, b_ab), (state_sh, b_sh), opt = train_specs(
+            cfg, shape, mesh, opt)
+        step = lm.make_train_step(cfg, opt, unrolled=unrolled, ctx=ctx)
+        fn = jax.jit(step, in_shardings=(state_sh, b_sh), donate_argnums=0)
+        return fn, (state_ab, b_ab)
+    ctx = ShardCtx(mesh, SERVE_RULES)
+    if kind == "prefill":
+        (p_ab, b_ab, c_ab), (p_sh, b_sh, c_sh) = serve_specs(
+            cfg, shape, mesh, "prefill")
+        step = lm.make_prefill_step(cfg, unrolled=unrolled, ctx=ctx)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=2)
+        return fn, (p_ab, b_ab, c_ab)
+    if kind == "decode":
+        (p_ab, b_ab, c_ab), (p_sh, b_sh, c_sh) = serve_specs(
+            cfg, shape, mesh, "decode")
+        step = lm.make_decode_step(cfg, unrolled=unrolled, ctx=ctx)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=2)
+        return fn, (p_ab, b_ab, c_ab)
+    raise ValueError(kind)
+
+
+def _compile_cell(cfg, shape, mesh, kind, unrolled=False):
+    fn, ab = _build(cfg, shape, mesh, kind, unrolled)
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        lowered = fn.lower(*ab)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll_total, coll_per = total_collective_bytes(txt)
+    return {
+        "compile_s": round(dt, 1),
+        "memory": _mem_dict(compiled.memory_analysis()),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll_per,
+        "hlo_chars": len(txt),
+    }
+
+
+def _extrapolate(cfg, shape, mesh, kind):
+    """Two-point unrolled lowering -> per-full-config exact cost terms."""
+    p = len(cfg.block_pattern)
+    if cfg.n_layers <= 2 * p:       # tiny models: just unroll fully
+        full = _compile_cell(cfg, shape, mesh, kind, unrolled=True)
+        return {k: full[k] for k in ("flops", "bytes_accessed",
+                                     "collective_bytes_per_device")}, [full]
+    lo = _compile_cell(with_layers(cfg, p), shape, mesh, kind, unrolled=True)
+    hi = _compile_cell(with_layers(cfg, 2 * p), shape, mesh, kind,
+                       unrolled=True)
+    L = cfg.n_layers
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes_per_device"):
+        slope = (hi[key] - lo[key]) / p
+        out[key] = hi[key] + (L - 2 * p) * slope
+    return out, [lo, hi]
+
+
+def roofline(record: dict, n_chips: int, cfg) -> dict:
+    # cost_analysis() numbers come from the partitioned (per-shard) module,
+    # i.e. they are PER-DEVICE (verified against a known sharded matmul),
+    # so each term divides by a single chip's peak.  The memory term uses
+    # the fusion-aware modeled traffic (launch/traffic.py) — the raw HLO
+    # "bytes accessed" (also recorded) counts unfused CPU-backend
+    # elementwise ops and overestimates TPU HBM traffic ~100x.
+    fl = record["cost_extrapolated"]["flops"]
+    by = record["modeled_bytes"]["total"]
+    co = record["cost_extrapolated"]["collective_bytes_per_device"]
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_l = co / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_l}
+    dom = max(terms, key=terms.get)
+    # 6ND for train (fwd+bwd), 2ND for inference passes; attention FLOPs are
+    # intentionally excluded from MODEL_FLOPS (the useful/HLO ratio then
+    # surfaces attention + remat + dispatch overhead together).
+    factor = 6 if record["kind"] == "train" else 2
+    model_flops = factor * cfg.n_active_params * record["tokens"]
+    # roofline fraction: time the *useful* model FLOPs would take at peak,
+    # over the dominant-term (i.e. achievable) step time.  1.0 = compute
+    # bound with zero waste.
+    ideal = model_flops / (n_chips * PEAK_FLOPS)
+    worst = max(terms.values())
+    return {
+        **terms,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / (fl * n_chips)) if fl else 0.0,
+        "roofline_fraction": (ideal / worst) if worst > 0 else 0.0,
+    }
+
+
+def _apply_overrides(cfg, overrides):
+    if not overrides:
+        return cfg
+    changes = {}
+    for kv in overrides:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        changes[k] = v
+    return dataclasses.replace(cfg, **changes)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             do_cost: bool = True, overrides=None) -> dict:
+    cfg = _apply_overrides(get_config(arch), overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "overrides": list(overrides or []),
+           "tokens": shape.global_batch * (shape.seq_len
+                                           if shape.kind != "decode" else 1)}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = 512 if multi else 256
+    try:
+        rec["full"] = _compile_cell(cfg, shape, mesh, shape.kind)
+        if do_cost and not multi:
+            cost, points = _extrapolate(cfg, shape, mesh, shape.kind)
+            rec["cost_extrapolated"] = cost
+            rec["cost_points"] = points
+            from repro.sharding import SERVE_RULES as SR, TRAIN_RULES as TR
+            rec["modeled_bytes"] = modeled_bytes(
+                cfg, shape, mesh, TR if shape.kind == "train" else SR,
+                shape.kind)
+            rec["roofline"] = roofline(rec, n_chips, cfg)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="ModelConfig overrides (e.g. --set kv_dtype=int8)")
+    ap.add_argument("--tag", default="",
+                    help="artifact suffix so variants don't clobber baselines")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for mk in meshes:
+        outdir = os.path.abspath(os.path.join(ART_DIR, mk))
+        os.makedirs(outdir, exist_ok=True)
+        for a, s in cells:
+            suffix = f"__{args.tag}" if args.tag else ""
+            path = os.path.join(outdir, f"{a}__{s}{suffix}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip cached] {mk} {a} {s}", flush=True)
+                continue
+            t0 = time.time()
+            rec = run_cell(a, s, mk, do_cost=not args.no_cost,
+                           overrides=args.overrides)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                mem = rec["full"]["memory"]
+                gb = (mem["argument_size_in_bytes"]
+                      + mem["temp_size_in_bytes"]) / 1e9
+                extra = f"mem/dev={gb:.2f}GB"
+                if "roofline" in rec:
+                    r = rec["roofline"]
+                    extra += (f" dom={r['dominant']}"
+                              f" t=({r['compute_s']:.4f},"
+                              f"{r['memory_s']:.4f},{r['collective_s']:.4f})s")
+            elif status == "failed":
+                extra = rec["error"][:200]
+            else:
+                extra = rec["reason"][:80]
+            print(f"[{status}] {mk} {a} {s} ({time.time()-t0:.0f}s) {extra}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

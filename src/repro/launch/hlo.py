@@ -1,0 +1,93 @@
+"""Post-SPMD HLO text analysis: collective operand bytes per category.
+
+``compiled.as_text()`` is the partitioned per-shard module, so shapes are
+per-device.  For every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (and their -start variants) we sum the *operand* bytes
+(task-spec convention) by resolving operand names against a symbol table of
+every instruction's result shape.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s+"
+                       r"([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {category: {"count": n, "operand_bytes": b}} per-device."""
+    # pass 1: symbol table  name -> result bytes
+    table: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            table[name] = _shape_bytes(type_str)
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVES:
+            continue
+        # operand section: up to the closing paren at depth 0
+        args = line[line.index(op + "(") + len(op) + 1:]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = args[:end]
+        operands = re.findall(r"%?([\w\.\-]+)", args)
+        b = 0
+        for o in operands:
+            if o in table:
+                b += table[o]
+        if b == 0:  # fallback: result bytes
+            b = _shape_bytes(type_str)
+        out[base]["count"] += 1
+        out[base]["operand_bytes"] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> Tuple[float, Dict]:
+    per = collective_bytes(hlo_text)
+    return sum(v["operand_bytes"] for v in per.values()), per

@@ -1,0 +1,53 @@
+"""Recompute roofline/modeled-bytes fields in existing dry-run artifacts.
+
+Reuses the stored (expensive) compile outputs — cost_extrapolated,
+collectives, memory — and re-derives the cheap analysis fields after a
+formula change, without recompiling.  Run after editing dryrun.roofline or
+traffic.modeled_bytes:
+
+    PYTHONPATH=src python -m repro.launch.recompute
+"""
+from __future__ import annotations
+
+import json
+import os
+from glob import glob
+
+from jax.sharding import AbstractMesh
+
+from repro.configs import SHAPES, get_config
+from repro.launch import dryrun as D
+from repro.launch.traffic import modeled_bytes
+from repro.sharding import SERVE_RULES, TRAIN_RULES
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def main() -> None:
+    n = 0
+    for path in sorted(glob(os.path.join(os.path.abspath(ART), "*",
+                                         "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok" or "cost_extrapolated" not in rec:
+            continue
+        from repro.launch.dryrun import _apply_overrides
+        cfg = _apply_overrides(get_config(rec["arch"]),
+                               rec.get("overrides"))
+        shape = SHAPES[rec["shape"]]
+        multi = rec["mesh"] == "multi"
+        mesh = AbstractMesh((2, 16, 16) if multi else (16, 16),
+                            ("pod", "data", "model") if multi
+                            else ("data", "model"))
+        rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+        rec["modeled_bytes"] = modeled_bytes(cfg, shape, mesh, rules,
+                                             shape.kind)
+        rec["roofline"] = D.roofline(rec, 512 if multi else 256, cfg)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"recomputed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable abstract trees — no
+device allocation — for the three lowered entry points:
+
+  train:   train_step(state, batch)
+  prefill: prefill(params, batch, caches0)
+  decode:  decode(params, batch, caches)      (one new token, full cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW, for_arch
+from repro.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
+                            resolve_spec, tree_shardings)
+
+
+def batch_abstract(cfg: ModelConfig, batch: int, seq: int,
+                   kind: str) -> Tuple[Dict, Dict]:
+    """(abstract, logical) for the input batch tree."""
+    i32 = jnp.int32
+    ab: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    lg: Dict[str, Any] = {"tokens": ("batch", "seq")}
+    if kind == "train":
+        ab["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        lg["labels"] = ("batch", "seq")
+    if cfg.attention is not None and cfg.attention.mrope_sections is not None:
+        ab["pos"] = jax.ShapeDtypeStruct((batch, seq, 3), i32)
+        lg["pos"] = ("batch", "seq", None)
+    if cfg.vision_stub:
+        ab["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        ab["vision_mask"] = jax.ShapeDtypeStruct((batch, seq), jnp.bool_)
+        lg["vision_embeds"] = ("batch", "seq", None)
+        lg["vision_mask"] = ("batch", "seq")
+    return ab, lg
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeCfg, mesh,
+                optimizer: Optional[AdamW] = None):
+    """Returns (abstract_args, in_shardings) for train_step(state, batch)."""
+    opt = optimizer or for_arch(cfg.arch_id)
+    defs = T.param_defs(cfg)
+    p_ab = T.tree_abstract(defs, cfg)
+    p_lg = T.tree_logical(defs)
+    o_ab = opt.init_abstract(p_ab)
+    o_lg = {"m": p_lg, "v": p_lg}
+    if opt.master_weights:
+        o_lg["master"] = p_lg
+    b_ab, b_lg = batch_abstract(cfg, shape.global_batch, shape.seq_len,
+                                "train")
+    state_ab = {"params": p_ab, "opt": o_ab,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_sh = {
+        "params": tree_shardings(p_ab, p_lg, mesh, TRAIN_RULES),
+        "opt": tree_shardings(o_ab, o_lg, mesh, TRAIN_RULES),
+        "step": NamedSharding(mesh, P()),
+    }
+    batch_sh = tree_shardings(b_ab, b_lg, mesh, TRAIN_RULES)
+    return (state_ab, b_ab), (state_sh, batch_sh), opt
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeCfg, mesh, kind: str):
+    """(abstract_args, in_shardings) for prefill/decode."""
+    defs = T.param_defs(cfg)
+    p_ab = T.tree_abstract(defs, cfg)
+    p_lg = T.tree_logical(defs)
+    p_sh = tree_shardings(p_ab, p_lg, mesh, SERVE_RULES)
+
+    if kind == "prefill":
+        b_ab, b_lg = batch_abstract(cfg, shape.global_batch, shape.seq_len,
+                                    "prefill")
+        cache_len = shape.seq_len
+    else:  # decode: one new token against a cache of seq_len
+        b_ab, b_lg = batch_abstract(cfg, shape.global_batch, 1, "decode")
+        cache_len = shape.seq_len
+    b_sh = tree_shardings(b_ab, b_lg, mesh, SERVE_RULES)
+
+    c_defs = T.cache_defs(cfg, shape.global_batch, cache_len)
+    c_ab = T.tree_abstract(c_defs, cfg)
+    c_lg = T.tree_logical(c_defs)
+    c_sh = tree_shardings(c_ab, c_lg, mesh, SERVE_RULES)
+    return (p_ab, b_ab, c_ab), (p_sh, b_sh, c_sh)
+
+
+def with_layers(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    return dataclasses.replace(cfg, n_layers=n_layers)

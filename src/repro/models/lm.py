@@ -1,0 +1,148 @@
+"""LM-level glue: embedding, forward, loss, and step builders.
+
+``batch`` trees use these keys:
+  train/prefill: {"tokens": (B,S) i32, "labels": (B,S) i32 (train only),
+                  "pos": (B,S) or (B,S,3) i32 (optional),
+                  "vision_embeds": (B,S,D), "vision_mask": (B,S) bool (vlm)}
+  decode:        {"tokens": (B,1) i32, "pos": (B,1) or (B,1,3) i32}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.transformer import apply_blocks
+from repro.sharding import constrain
+
+Z_LOSS_COEF = 0.0  # optional stabiliser; kept 0 to match reference losses
+
+
+def embed(cfg: ModelConfig, params, batch: Dict[str, Any]) -> jax.Array:
+    tokens = batch["tokens"]
+    x = jnp.take(params["emb"], tokens, axis=0)
+    if cfg.vision_stub and batch.get("vision_embeds") is not None:
+        mask = batch["vision_mask"][..., None]
+        x = jnp.where(mask, batch["vision_embeds"].astype(x.dtype), x)
+    return x
+
+
+def positions(cfg: ModelConfig, batch: Dict[str, Any]) -> jax.Array:
+    if batch.get("pos") is not None:
+        return batch["pos"]
+    B, S = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.attention is not None and cfg.attention.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def unembed(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    head = params["emb"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x, head)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+            mode: str = "train", caches=None, unrolled: bool = False,
+            ctx=None, last_token_only: bool = False):
+    """Returns (logits, new_caches, aux_loss)."""
+    x = embed(cfg, params, batch)
+    x = constrain(x, ("batch", None, None), ctx)
+    pos = positions(cfg, batch)
+    x, new_caches, aux = apply_blocks(cfg, params, x, mode=mode, pos=pos,
+                                      caches=caches, unrolled=unrolled,
+                                      ctx=ctx)
+    if last_token_only:
+        # prefill only needs next-token logits: skip the (B,S,V) unembed
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+    logits = constrain(logits, ("batch", None, "vocab"), ctx)
+    return logits, new_caches, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, Any], *,
+            unrolled: bool = False,
+            ctx=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(cfg, params, batch, mode="train",
+                             unrolled=unrolled, ctx=ctx)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll * mask) / denom
+    else:
+        ce = jnp.mean(nll)
+    total = ce + aux
+    if Z_LOSS_COEF:
+        total = total + Z_LOSS_COEF * jnp.mean(jnp.square(lse))
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, unrolled: bool = False,
+                    clip_norm: float = 1.0, ctx=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``state`` = {"params", "opt", "step"}; ``optimizer`` is a
+    ``repro.optim.adamw.AdamW`` (init/update pair).
+    """
+
+    def train_step(state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, unrolled=unrolled, ctx=ctx),
+            has_aux=True)(state["params"])
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                        ).astype(g.dtype), grads)
+        params, opt = optimizer.update(state["params"], grads, state["opt"],
+                                       state["step"])
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return {"params": params, "opt": opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, unrolled: bool = False,
+                      ctx=None):
+    """prefill(params, batch, caches0) -> (caches, last_token_logits)."""
+
+    def prefill(params, batch, caches0):
+        logits, caches, _ = forward(cfg, params, batch, mode="prefill",
+                                    caches=caches0, unrolled=unrolled,
+                                    ctx=ctx, last_token_only=True)
+        del caches0
+        return caches, logits[:, -1]
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, unrolled: bool = False,
+                     ctx=None):
+    """decode(params, batch, caches) -> (caches, logits (B,V))."""
+
+    def decode(params, batch, caches):
+        logits, caches, _ = forward(cfg, params, batch, mode="decode",
+                                    caches=caches, unrolled=unrolled,
+                                    ctx=ctx)
+        return caches, logits[:, -1]
+
+    return decode
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits: jax.Array, temp: float = 1.0) -> jax.Array:
+    return jax.random.categorical(key, logits / temp).astype(jnp.int32)

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts FFN with two dispatch modes.
+
+``global`` (paper-faithful baseline): flat top-k assignments are sorted by
+expert id over ALL tokens and gathered into an (E, C, D) buffer.  Simple,
+but under SPMD the global sort + scatter force replication/all-reduce of
+the dispatch buffers — the dominant collective term in the baseline
+roofline (EXPERIMENTS.md §Perf).
+
+``grouped`` (optimized): GShard-style groups = batch rows.  Routing, sort,
+rank and capacity are computed *per row*, so every op is local to the data
+shard that owns the row — no global sort, no replicated buffers.  Capacity
+C is per (row, expert); semantics match token-choice top-k with per-group
+capacity (drops differ from global dispatch only under extreme imbalance).
+
+Expert weights carry logical axes ("experts","d_model","d_ff"); on the
+production mesh the expert count (60/8) does not divide model=16, so the
+divisibility-aware resolver yields per-expert FSDP+TP (dense TP experts).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, act_fn
+from repro.sharding import constrain
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    D = cfg.d_model
+    defs = {
+        "router": ParamDef((D, m.n_experts), ("d_model", "experts")),
+        "we1": ParamDef((m.n_experts, D, m.d_expert),
+                        ("experts", "d_model", "d_ff"), init="normal1"),
+        "we3": ParamDef((m.n_experts, D, m.d_expert),
+                        ("experts", "d_model", "d_ff"), init="normal1"),
+        "we2": ParamDef((m.n_experts, m.d_expert, D),
+                        ("experts", "d_ff", "d_model"), init="normal1"),
+    }
+    if m.d_shared:
+        defs.update({
+            "ws1": ParamDef((D, m.d_shared), ("d_model", "d_ff")),
+            "ws3": ParamDef((D, m.d_shared), ("d_model", "d_ff")),
+            "ws2": ParamDef((m.d_shared, D), ("d_ff", "d_model")),
+            "wsg": ParamDef((D, 1), ("d_model", None), init="zeros"),
+        })
+    return defs
+
+
+def _round8(c: int) -> int:
+    return max(8, -(-c // 8) * 8)
+
+
+def _shared_expert(cfg, p, xf):
+    g = jnp.einsum("nd,df->nf", xf, p["ws1"])
+    u = jnp.einsum("nd,df->nf", xf, p["ws3"])
+    sh = jnp.einsum("nf,fd->nd", act_fn(cfg.act)(g) * u, p["ws2"])
+    gate = jax.nn.sigmoid(
+        jnp.einsum("nd,do->no", xf, p["wsg"]).astype(jnp.float32))
+    return sh * gate.astype(xf.dtype)
+
+
+def _aux_loss(cfg, probs, top_e, n_tokens, counts=None):
+    """Switch-style balance loss.  ``counts`` (per-expert assignment counts,
+    if the caller already has them) avoids the scatter+reshape that SPMD
+    turns into an all-gather of the router probabilities."""
+    m = cfg.moe
+    # mean over leading axes without reshaping away the sharded batch dim
+    pe = jnp.mean(probs.astype(jnp.float32),
+                  axis=tuple(range(probs.ndim - 1)))
+    if counts is None:
+        counts = jnp.zeros((m.n_experts,), jnp.float32).at[
+            top_e.reshape(-1)].add(1.0)
+    frac = counts.astype(jnp.float32) / (n_tokens * m.top_k)
+    return m.n_experts * jnp.sum(pe * frac) * m.router_aux_coef
+
+
+def moe_apply_global(cfg: ModelConfig, p: dict, x: jax.Array, ctx=None):
+    """Baseline global-sort dispatch (see module docstring)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    xf = x.reshape(N, D)
+
+    logits = jnp.einsum("nd,de->ne", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)          # (N, K)
+    aux = _aux_loss(cfg, probs, top_e, N)
+
+    C = _round8(int(N * m.top_k * m.capacity_factor / m.n_experts))
+    NK = N * m.top_k
+    flat_e = top_e.reshape(NK)
+    flat_w = top_p.reshape(NK)
+    flat_tok = jnp.repeat(jnp.arange(N), m.top_k)
+
+    order = jnp.argsort(flat_e, stable=True)              # global sort
+    e_sorted = flat_e[order]
+    counts = jnp.zeros((m.n_experts,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(NK, dtype=jnp.int32) - starts[e_sorted]
+    slot = jnp.where(rank < C, e_sorted * C + rank, m.n_experts * C)
+
+    buf = jnp.zeros((m.n_experts * C + 1, D), x.dtype)
+    buf = buf.at[slot].set(xf[flat_tok[order]], mode="drop")
+    eb = buf[:-1].reshape(m.n_experts, C, D)
+
+    g = jnp.einsum("ecd,edf->ecf", eb, p["we1"])
+    u = jnp.einsum("ecd,edf->ecf", eb, p["we3"])
+    eo = jnp.einsum("ecf,efd->ecd", act_fn(cfg.act)(g) * u, p["we2"])
+
+    eo_flat = jnp.concatenate(
+        [eo.reshape(m.n_experts * C, D), jnp.zeros((1, D), x.dtype)], axis=0)
+    contrib = eo_flat[jnp.minimum(slot, m.n_experts * C)]
+    contrib = contrib * flat_w[order][:, None].astype(x.dtype)
+    contrib = jnp.where((rank < C)[:, None], contrib, 0)
+    out = jnp.zeros((N, D), x.dtype).at[flat_tok[order]].add(contrib)
+
+    if m.d_shared:
+        out = out + _shared_expert(cfg, p, xf)
+    return out.reshape(B, S, D), aux
+
+
+def moe_apply_grouped(cfg: ModelConfig, p: dict, x: jax.Array, ctx=None):
+    """Row-local, SCATTER-FREE dispatch.
+
+    All routing ops keep the (data-sharded) batch axis, and both dispatch
+    and combine are expressed as gathers: XLA SPMD shards gathers along the
+    batch dim but falls back to all-gathering scatter *updates* (the 34 GB
+    collective the baseline showed — EXPERIMENTS.md §Perf, moe iter 2):
+
+      dispatch: expert e's capacity slots are the sorted positions
+                [starts[e], starts[e]+C) -> take_along_axis from x
+      combine:  invert the sort permutation, compute each assignment's slot
+                arithmetically, gather from expert outputs, weighted-sum
+                the K contributions per token.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    NK = S * m.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)          # (B, S, K)
+
+    C = _round8(int(S * m.top_k * m.capacity_factor / m.n_experts))
+    EC = m.n_experts * C
+    flat_e = top_e.reshape(B, NK)
+    flat_w = top_p.reshape(B, NK).astype(x.dtype)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), m.top_k)[None], (B, NK))
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)      # per-row sort
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(
+        se, jnp.arange(m.n_experts), side="left"))(e_sorted)   # (B, E)
+    seg_end = jnp.concatenate(
+        [starts[:, 1:], jnp.full((B, 1), NK, starts.dtype)], axis=1)
+    aux = _aux_loss(cfg, probs, top_e, B * S,
+                    counts=jnp.sum(seg_end - starts, axis=0))
+
+    # ---- dispatch (gather): slot (e, c) <- sorted position starts[e]+c
+    pos = starts[:, :, None] + jnp.arange(C)[None, None]       # (B, E, C)
+    valid = pos < seg_end[:, :, None]
+    posc = jnp.minimum(pos, NK - 1).reshape(B, EC)
+    gtok = jnp.take_along_axis(tok_sorted, posc, axis=1)       # (B, EC)
+    eb = jnp.take_along_axis(x, gtok[..., None], axis=1)
+    eb = eb.reshape(B, m.n_experts, C, D) * valid[..., None].astype(x.dtype)
+    eb = constrain(eb, ("batch", None, None, None), ctx)
+
+    g = jnp.einsum("becd,edf->becf", eb, p["we1"])
+    u = jnp.einsum("becd,edf->becf", eb, p["we3"])
+    eo = jnp.einsum("becf,efd->becd", act_fn(cfg.act)(g) * u, p["we2"])
+    eo = constrain(eo, ("batch", None, None, None), ctx)
+
+    # ---- combine (gather): invert the permutation, slot arithmetic
+    inv = jnp.argsort(order, axis=1)                          # (B, NK)
+    rank = inv - jnp.take_along_axis(starts, flat_e, axis=1)
+    slot = jnp.where(rank < C, flat_e * C + rank, EC)
+    eo_flat = jnp.concatenate(
+        [eo.reshape(B, EC, D), jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    contrib = jnp.take_along_axis(
+        eo_flat, jnp.minimum(slot, EC)[..., None], axis=1)    # (B, NK, D)
+    contrib = contrib * flat_w[..., None]
+    contrib = jnp.where((rank < C)[..., None], contrib, 0)
+    out = contrib.reshape(B, S, m.top_k, D).sum(axis=2)
+    out = constrain(out, ("batch", None, None), ctx)
+
+    if m.d_shared:
+        out = out + _shared_expert(cfg, p,
+                                   x.reshape(B * S, D)).reshape(B, S, D)
+    return out, aux
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array, ctx=None):
+    if cfg.moe_dispatch == "grouped":
+        return moe_apply_grouped(cfg, p, x, ctx)
+    return moe_apply_global(cfg, p, x, ctx)

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    x1   = conv1d_causal(W_x x)        (temporal conv, width 4)
+    r_t  = sigmoid(W_a x1_t)           (recurrence gate)
+    i_t  = sigmoid(W_b x1_t)           (input gate)
+    a_t  = exp(-c * r_t * softplus(L))
+    h_t  = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x1_t)
+    out  = W_o (h * gelu(W_g x))
+
+The diagonal recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth parallel scan) for train/prefill, and carried per-token state
+(h, conv window) for decode.  The Pallas kernel in ``repro.kernels.rg_lru``
+implements the same blocked scan for TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    W = cfg.rglru.width or D
+    K = cfg.rglru.conv_width
+    return {
+        "wx": ParamDef((D, W), ("d_model", "rec_width")),
+        "wg": ParamDef((D, W), ("d_model", "rec_width")),
+        "conv": ParamDef((K, W), ("conv", "rec_width"), init="small"),
+        "conv_b": ParamDef((W,), ("rec_width",), init="zeros"),
+        "wa": ParamDef((W, W), (None, "rec_width")),
+        "wb": ParamDef((W, W), (None, "rec_width")),
+        "lam": ParamDef((W,), ("rec_width",), init="lru_lambda"),
+        "wo": ParamDef((W, D), ("rec_width", "d_model")),
+    }
+
+
+def rglru_state_defs(cfg: ModelConfig, batch: int) -> dict:
+    W = cfg.rglru.width or cfg.d_model
+    K = cfg.rglru.conv_width
+    return {
+        "h": ParamDef((batch, W), ("batch", "rec_width"), dtype="float32"),
+        "conv": ParamDef((batch, K - 1, W), ("batch", None, "rec_width")),
+    }
+
+
+def _scan_recurrence(a: jax.Array, bx: jax.Array, h0: Optional[jax.Array]):
+    """h_t = a_t h_{t-1} + bx_t over axis 1 via associative scan (fp32)."""
+    if h0 is not None:
+        # fold the carry into the first step's additive term; a_0 is never
+        # applied to anything earlier by the scan, so no further change needed
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                mode: str, state: Optional[dict] = None):
+    """x: (B,T,D) -> (out, new_state)."""
+    g = cfg.rglru
+    B, T, D = x.shape
+    K = g.conv_width
+    x1 = jnp.einsum("btd,dw->btw", x, p["wx"])
+    gate = jnp.einsum("btd,dw->btw", x, p["wg"])
+
+    # causal temporal conv
+    if mode == "decode":
+        hist = jnp.concatenate([state["conv"], x1], axis=1)   # (B,K,W)
+        xc = jnp.einsum("bkw,kw->bw", hist, p["conv"])[:, None] + p["conv_b"]
+        new_conv = hist[:, 1:]
+    else:
+        pad = jnp.zeros((B, K - 1, x1.shape[-1]), x1.dtype)
+        if state is not None:
+            pad = state["conv"]
+        hist = jnp.concatenate([pad, x1], axis=1)             # (B,T+K-1,W)
+        xc = sum(hist[:, i:i + T] * p["conv"][i] for i in range(K))
+        xc = xc + p["conv_b"]
+        new_conv = hist[:, -(K - 1):]
+
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, p["wa"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xc, p["wb"])
+                       .astype(jnp.float32))
+    log_a = -g.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * (i * xc.astype(jnp.float32))
+
+    h0 = state["h"] if state is not None else None
+    if T == 1:
+        hprev = h0 if h0 is not None else jnp.zeros_like(bx[:, 0])
+        h = (a[:, 0] * hprev + bx[:, 0])[:, None]
+    else:
+        h = _scan_recurrence(a, bx, h0)
+
+    out = h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("btw,wd->btd", out, p["wo"])
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    return out, new_state

@@ -1,0 +1,194 @@
+"""RWKV-6 (Finch) block: data-dependent-decay linear recurrence.
+
+Faithful to arXiv:2404.05892: ddlerp token shift with low-rank data-dependent
+mixing, per-channel data-dependent decay ``w_t = exp(-exp(w0 + lora(x)))``,
+bonus ``u``, matrix-valued per-head state S in R^{dk x dv}:
+
+    y_t = r_t . (S_{t-1} + (u*k_t)^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+Prefill/train uses a chunked formulation: ``lax.scan`` over time chunks with
+within-chunk O(T_c^2) parallel compute and cross-chunk state carry — the same
+blocking the Pallas path uses on TPU.  Decode carries (S, last_x) per layer.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, group_norm_heads
+
+
+def rwkv_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    r = cfg.rwkv
+    H = D // r.head_size
+    lw, lm = r.decay_lora, r.mix_lora
+    return {
+        # time-mix
+        "mu_x": ParamDef((D,), (None,), init="small"),
+        "mu_rkvwg": ParamDef((5, D), (None, None), init="small"),
+        "mix_a": ParamDef((D, 5 * lm), ("d_model", None), init="small"),
+        "mix_b": ParamDef((5, lm, D), (None, "lora", None), init="small"),
+        "w0": ParamDef((D,), (None,), init="decay"),
+        "wa": ParamDef((D, lw), ("d_model", None), init="small"),
+        "wb": ParamDef((lw, D), ("lora", None), init="small"),
+        "u": ParamDef((H, r.head_size), (None, None), init="small"),
+        "wr": ParamDef((D, D), ("d_model", "rec_width")),
+        "wk": ParamDef((D, D), ("d_model", "rec_width")),
+        "wv": ParamDef((D, D), ("d_model", "rec_width")),
+        "wg": ParamDef((D, D), ("d_model", "rec_width")),
+        "wo": ParamDef((D, D), ("rec_width", "d_model")),
+        "ln_s": ParamDef((D,), (None,), init="ones"),
+        "ln_b": ParamDef((D,), (None,), init="zeros"),
+        # channel-mix
+        "cmu_k": ParamDef((D,), (None,), init="small"),
+        "cmu_r": ParamDef((D,), (None,), init="small"),
+        "ck": ParamDef((D, cfg.d_ff), ("d_model", "d_ff")),
+        "cv": ParamDef((cfg.d_ff, D), ("d_ff", "d_model")),
+        "cr": ParamDef((D, D), ("d_model", "rec_width")),
+    }
+
+
+def rwkv_state_defs(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    hs = cfg.rwkv.head_size
+    H = D // hs
+    return {
+        "S": ParamDef((batch, H, hs, hs), ("batch", None, None, None),
+                      dtype="float32"),
+        "tm_x": ParamDef((batch, D), ("batch", None)),   # last token (time-mix)
+        "cm_x": ParamDef((batch, D), ("batch", None)),   # last token (chan-mix)
+    }
+
+
+def _ddlerp(x, sx, p):
+    """Data-dependent lerp producing the 5 (r,k,v,w,g) mixed inputs."""
+    lm = p["mix_b"].shape[1]
+    base = x + sx * p["mu_x"]
+    low = jnp.tanh(jnp.einsum("btd,dl->btl", base, p["mix_a"]))
+    low = low.reshape(*low.shape[:-1], 5, lm)
+    dyn = jnp.einsum("btil,ild->ibtd", low, p["mix_b"])
+    mus = p["mu_rkvwg"][:, None, None, :]
+    return x[None] + sx[None] * (mus + dyn)               # (5, B, T, D)
+
+
+def _wkv_chunk(S0, r, k, v, w, u):
+    """One chunk of the wkv recurrence, parallel within the chunk.
+
+    r,k,v,w: (B, T, H, hs) fp32; S0: (B, H, hs, hs) fp32.
+    Returns (y (B,T,H,hs), S1).
+    """
+    B, T, H, hs = r.shape
+    logw = jnp.log(w)                                      # (B,T,H,hs), <0
+    cum = jnp.cumsum(logw, axis=1)                         # inclusive
+    # contribution of the carried-in state: decay up to t-1 => cum - logw
+    dec_in = jnp.exp(cum - logw)                           # (B,T,H,hs)
+    y_state = jnp.einsum("bthk,bhkv->bthv", r * dec_in, S0)
+    # intra-chunk: pair (t, s<t): decay prod_{i=s+1}^{t-1} w_i = exp(cum_{t-1}-cum_s)
+    # plus the diagonal bonus term u at s == t.  The two exp factors are
+    # shifted by the chunk-midpoint cumulative decay and clamped so their
+    # product never overflows: pairs where a factor clamps have a true decay
+    # of exp(<-60) ~ 0 anyway.
+    ks = k
+    shift = cum[:, T // 2][:, None]                        # (B,1,H,hs)
+    f_t = jnp.exp(jnp.clip(cum - logw - shift, -60.0, 60.0))
+    f_s = jnp.exp(jnp.clip(shift - cum, -60.0, 60.0))
+    att = jnp.einsum("bthk,bshk->bhts", r * f_t, ks * f_s)
+    idx_t = jnp.arange(T)[:, None]
+    idx_s = jnp.arange(T)[None, :]
+    att = jnp.where((idx_s < idx_t)[None, None], att, 0.0)
+    diag = jnp.einsum("bthk,bthk->bth", r, u[None, None] * ks)
+    y_intra = jnp.einsum("bhts,bshv->bthv", att, v)
+    y_intra = y_intra + diag[..., None] * v
+    # state update: S1 = exp(cum_T) S0 + sum_s exp(cum_T - cum_s) k_s^T v_s
+    dec_all = jnp.exp(cum[:, -1])                          # (B,H,hs)
+    S1 = dec_all[..., None] * S0 + jnp.einsum(
+        "bshk,bshv->bhkv", ks * jnp.exp(cum[:, -1:] - cum), v)
+    return y_state + y_intra, S1
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                  mode: str, state: Optional[dict], chunk: int = 128,
+                  unrolled: bool = False):
+    B, T, D = x.shape
+    hs = cfg.rwkv.head_size
+    H = D // hs
+
+    if mode == "decode":
+        prev = state["tm_x"][:, None]                      # (B,1,D)
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if state is not None:
+            prev = prev.at[:, 0].set(state["tm_x"])
+    sx = prev - x
+    xr, xk, xv, xw, xg = _ddlerp(x, sx, p)
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(B, T, H, hs)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(B, T, H, hs)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+    dw = jnp.einsum("btd,dl->btl", jnp.tanh(xw @ p["wa"]), p["wb"])
+    w = jnp.exp(-jnp.exp((p["w0"] + dw).astype(jnp.float32)))
+    w = w.reshape(B, T, H, hs)
+
+    rf, kf, vf = (t.astype(jnp.float32).reshape(B, T, H, hs) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, hs, hs),
+                                                        jnp.float32)
+    if T == 1:
+        kv = jnp.einsum("bhk,bhv->bhkv", kf[:, 0], vf[:, 0])
+        y = jnp.einsum("bhk,bhkv->bhv", rf[:, 0],
+                       S0 + u[None, :, :, None] * kv)[:, None]
+        S1 = w[:, 0][..., None] * S0 + kv
+    else:
+        c = min(chunk, T)
+        assert T % c == 0
+        nchunks = T // c
+        if unrolled:
+            ys, S = [], S0
+            for i in range(nchunks):
+                sl = slice(i * c, (i + 1) * c)
+                yi, S = _wkv_chunk(S, rf[:, sl], kf[:, sl], vf[:, sl],
+                                   w[:, sl], u)
+                ys.append(yi)
+            y, S1 = jnp.concatenate(ys, axis=1), S
+        else:
+            def body(S, inp):
+                ri, ki, vi, wi = inp
+                yi, S = _wkv_chunk(S, ri, ki, vi, wi, u)
+                return S, yi
+            resh = lambda t: t.reshape(B, nchunks, c, H, hs).transpose(
+                1, 0, 2, 3, 4)
+            S1, ys = jax.lax.scan(body, S0,
+                                  (resh(rf), resh(kf), resh(vf), resh(w)))
+            y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hs)
+
+    y = group_norm_heads(y.astype(x.dtype), p["ln_s"].reshape(H, hs),
+                         p["ln_b"].reshape(H, hs), cfg.norm_eps)
+    y = (y.reshape(B, T, D) * g)
+    out = jnp.einsum("btd,de->bte", y, p["wo"])
+    new_state = None
+    if mode in ("prefill", "decode"):
+        new_state = {"S": S1, "tm_x": x[:, -1]}
+    return out, new_state
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                     mode: str, state: Optional[dict]):
+    if mode == "decode":
+        prev = state["cm_x"][:, None]
+    else:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if state is not None:
+            prev = prev.at[:, 0].set(state["cm_x"])
+    sx = prev - x
+    xk = x + sx * p["cmu_k"]
+    xr = x + sx * p["cmu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["ck"])))
+    v = jnp.einsum("btf,fd->btd", k, p["cv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"]))
+    return r * v, (x[:, -1] if mode in ("prefill", "decode") else None)

@@ -1,0 +1,108 @@
+"""AdamW with configurable state dtype (fp32 / bf16) and optional fp32
+master weights — the knobs that decide whether grok-1-314b's optimizer fits
+in HBM or must ride the NMA host-offload path (DESIGN.md §9).
+
+State tree: {"m": tree, "v": tree, "master": tree|None}.  Moment/master
+sharding mirrors parameter sharding (ZeRO — the logical-axis rules already
+shard params over the data axis, so optimizer state is sharded identically
+for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"     # moments dtype
+    master_weights: bool = False     # keep fp32 master copy of bf16 params
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1.0) / max(1, self.warmup_steps))
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(1, self.decay_steps - self.warmup_steps), 0, 1)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params: Any) -> Any:
+        sdt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        state = {"m": jax.tree.map(zeros, params),
+                 "v": jax.tree.map(zeros, params)}
+        if self.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def init_abstract(self, abstract_params: Any) -> Any:
+        sdt = jnp.dtype(self.state_dtype)
+        sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+        state = {"m": jax.tree.map(lambda p: sds(p, sdt), abstract_params),
+                 "v": jax.tree.map(lambda p: sds(p, sdt), abstract_params)}
+        if self.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: sds(p, jnp.float32), abstract_params)
+        return state
+
+    def update(self, params: Any, grads: Any, state: Any, step: jax.Array):
+        sdt = jnp.dtype(self.state_dtype)
+        lr = self.schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v, master):
+            g32 = g.astype(jnp.float32)
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            base = master if master is not None else p.astype(jnp.float32)
+            upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:
+                upd = upd + self.weight_decay * base
+            new = base - lr * upd
+            return new, m32.astype(sdt), v32.astype(sdt)
+
+        masters = state.get("master")
+        if masters is None:
+            triples = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None),
+                                   params, grads, state["m"], state["v"])
+        else:
+            triples = jax.tree.map(upd, params, grads,
+                                   state["m"], state["v"], masters)
+
+        new_master = jax.tree.map(lambda t3: t3[0], triples,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t3: t3[1], triples,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t3: t3[2], triples,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda t3, p: t3[0].astype(p.dtype), triples, params,
+            is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v}
+        if state.get("master") is not None:
+            new_state["master"] = new_master
+        return new_params, new_state
+
+
+def for_arch(arch_id: str, **overrides) -> AdamW:
+    """Per-arch optimizer policy (DESIGN.md §9): grok-1 uses bf16 moments."""
+    kw = dict(overrides)
+    if arch_id == "grok-1-314b":
+        kw.setdefault("state_dtype", "bfloat16")
+    return AdamW(**kw)

@@ -1,0 +1,73 @@
+"""Gradient compression for cross-pod reduction.
+
+Two schemes usable as hooks around the data-parallel gradient reduction
+(applied inside shard_map in ``launch/train.py`` when enabled):
+
+* ``bf16``: cast-to-bf16 before all-reduce (2x wire bytes), unbiased enough
+  for momentum-based optimizers.
+* ``int8 error-feedback``: per-tensor max-abs int8 quantisation; the
+  residual is carried and re-added next step (Seide et al. / EF-SGD), so
+  the quantisation bias telescopes to zero over steps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclass(frozen=True)
+class EFState:
+    residual: Any  # pytree matching grads
+
+
+def ef_init(grads_like: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def ef_compress(grads: Any, state: EFState):
+    """Returns (tree with (q, scale) tuples at leaf slots, new EFState)."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = jax.tree.leaves(state.residual)
+    qs, rs = [], []
+    for g, r in zip(g_leaves, r_leaves):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize_int8(corrected)
+        qs.append((q, s))
+        rs.append(corrected - dequantize_int8(q, s))
+    return (jax.tree.unflatten(treedef, qs),
+            EFState(jax.tree.unflatten(treedef, rs)))
+
+
+def ef_decompress(qtree: Any) -> Any:
+    return jax.tree.map(
+        lambda qs: dequantize_int8(*qs), qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+
+
+def compress_for_allreduce(grads: Any, scheme: str, ef_state=None):
+    """One-stop hook: returns (wire_tree, decompress_fn, new_ef_state)."""
+    if scheme == "none":
+        return grads, lambda t: t, ef_state
+    if scheme == "bf16":
+        wire = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        return wire, (lambda t: jax.tree.map(
+            lambda g: g.astype(jnp.float32), t)), ef_state
+    if scheme == "int8_ef":
+        assert ef_state is not None
+        qtree, new_state = ef_compress(grads, ef_state)
+        return qtree, ef_decompress, new_state
+    raise ValueError(scheme)

@@ -1,0 +1,85 @@
+"""Fault tolerance: retrying step execution, heartbeat/straggler detection.
+
+On a real multi-host deployment each worker runs a ``Heartbeat`` and the
+coordinator restarts lost workers; here the same objects drive the training
+loop (``launch/train.py``) and are unit-tested with injected failures:
+
+* ``StepGuard``: executes a step with bounded retries; after
+  ``max_retries`` it restores the latest checkpoint and replays.
+* ``Heartbeat``/``StragglerMonitor``: EWMA of step wall-time; a step slower
+  than ``threshold x`` the EWMA flags a straggler (on TPU pods this triggers
+  re-sharding away from the slow host — here it feeds the elastic planner).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+
+class StepFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class StepGuard:
+    max_retries: int = 2
+    on_restore: Optional[Callable[[], Any]] = None  # -> fresh state
+    failures: int = 0
+    restores: int = 0
+
+    def run(self, step_fn: Callable, state, *args):
+        last = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return step_fn(state, *args)
+            except (FloatingPointError, StepFailure, RuntimeError) as e:
+                self.failures += 1
+                last = e
+                time.sleep(0.01 * (2 ** attempt))  # backoff
+        if self.on_restore is not None:
+            self.restores += 1
+            state = self.on_restore()
+            return step_fn(state, *args)
+        raise StepFailure(f"step failed after {self.max_retries + 1} "
+                          f"attempts") from last
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.5     # x EWMA
+    alpha: float = 0.2
+    warmup: int = 3
+    ewma: float = 0.0
+    n: int = 0
+    stragglers: List[int] = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ewma = seconds if self.ewma == 0 else \
+                (1 - self.alpha) * self.ewma + self.alpha * seconds
+            return False
+        slow = seconds > self.threshold * self.ewma
+        if slow:
+            self.stragglers.append(step)
+        else:
+            # only fold non-straggler samples into the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * seconds
+        return slow
+
+
+@dataclass
+class Heartbeat:
+    """Worker liveness ledger (coordinator side)."""
+    timeout_s: float = 30.0
+    last_seen: dict = field(default_factory=dict)
+
+    def beat(self, worker: int, t: Optional[float] = None) -> None:
+        self.last_seen[worker] = time.monotonic() if t is None else t
+
+    def dead_workers(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return sorted(w for w, t in self.last_seen.items()
+                      if now - t > self.timeout_s)

@@ -1,0 +1,116 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every parameter/activation is annotated with a tuple of *logical* axis names
+(e.g. ``("layers", "d_model", "d_ff")``).  ``resolve_spec`` maps logical axes
+to mesh axes via an ordered rule table, skipping any candidate mesh axis that
+does not evenly divide the dimension or is already consumed by another dim of
+the same tensor.  This keeps every (arch x shape x mesh) cell compilable: a
+dim that cannot be sharded is silently replicated instead of erroring (e.g.
+qwen2-0.5b's 14 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Candidate mesh axes per logical axis, in preference order.  Entries may be
+# tuples (shard over several mesh axes jointly).  These are the *training*
+# defaults (FSDP + TP); serving overrides below.
+TRAIN_RULES: Dict[str, Tuple] = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),                       # replicated by default in training
+    "seq_shard": (("model",),),      # sequence parallelism opt-in
+    # parameters — TP axes
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "d_ff": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),
+    "rec_width": (("model",),),
+    # parameters — FSDP axis
+    "d_model": (("data",),),
+    "d_model_pod": (("pod", "data"), ("data",)),  # ZeRO over pods too
+    # never sharded
+    "layers": (),
+    "d_head": (),
+    "conv": (),
+    "lora": (),
+    "mrope": (),
+}
+
+# Serving: no FSDP (params replicated over data, TP over model), batch on data,
+# KV sequence on model (flash-decode style sequence parallelism).
+SERVE_RULES: Dict[str, Tuple] = {
+    **TRAIN_RULES,
+    "d_model": (),
+    "d_model_pod": (),
+    "kv_seq": (("model",),),
+    "seq": (("data",),),           # prefill: shard long seq over data
+}
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Mapping[str, Tuple],
+) -> P:
+    """Map logical axes -> PartitionSpec honouring divisibility + exclusivity."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if name:
+            for cand in rules.get(name, ()):
+                axes = tuple(a for a in cand if a in mesh.axis_names)
+                if not axes:
+                    continue
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                if size > 1 and dim % size == 0 and not (set(axes) & used):
+                    assigned = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+                    break
+        out.append(assigned)
+    return P(*out)
+
+
+def tree_shardings(abstract_tree, logical_tree, mesh: Mesh, rules) -> object:
+    """NamedSharding pytree matching an abstract (ShapeDtypeStruct) pytree."""
+    def one(leaf, logical):
+        spec = resolve_spec(leaf.shape, logical, mesh, rules)
+        return NamedSharding(mesh, spec)
+    # tree.map flattens up to ``abstract_tree``'s leaves, so the tuple-of-str
+    # logical annotations are passed through whole.
+    return jax.tree.map(one, abstract_tree, logical_tree)
+
+
+class ShardCtx:
+    """Mesh + rules bundle for in-graph activation constraints."""
+
+    def __init__(self, mesh: Mesh, rules: Mapping[str, Tuple]):
+        self.mesh = mesh
+        self.rules = rules
+
+    def constrain(self, x, logical: Sequence[Optional[str]]):
+        spec = resolve_spec(x.shape, logical, self.mesh, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def constrain(x, logical, ctx: Optional[ShardCtx]):
+    """Pin activation sharding; no-op when ctx is None (single-device)."""
+    return x if ctx is None else ctx.constrain(x, logical)
+
+
+def batch_spec(mesh: Mesh, rules=TRAIN_RULES) -> P:
+    for cand in rules["batch"]:
+        axes = tuple(a for a in cand if a in mesh.axis_names)
+        if axes:
+            return P(axes if len(axes) > 1 else axes[0])
+    return P()

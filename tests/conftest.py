@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests must see the real single CPU device (the 512-device override is
+# exclusively dryrun.py's); keep any accidental inherited flag out.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,66 @@
+"""Analytical bandwidth model vs the paper's measured anchors (§6)."""
+import pytest
+
+from repro.core.analytical import (bandwidth_gbps, chan_eff, paper_pcie_bram,
+                                   paper_pcie_ddr4, tpu_host_path,
+                                   tpu_ici_path)
+from repro.core.channels import Direction
+
+MB = 1 << 20
+
+# (model, size, channels, direction, paper_value_gbps, rel_tol)
+ANCHORS = [
+    # Fig 10: DDR4 C2H single channel peaks ~12 GB/s
+    (paper_pcie_ddr4, 4 * MB, 1, Direction.C2H, 12.0, 0.25),
+    # Fig 9: DDR4 H2C single channel peaks ~10.8 GB/s
+    (paper_pcie_ddr4, 4 * MB, 1, Direction.H2C, 10.8, 0.25),
+    # Fig 10: multi-channel C2H 13-14 GB/s
+    (paper_pcie_ddr4, 4 * MB, 4, Direction.C2H, 13.5, 0.25),
+    # Fig 8: BRAM ~7.5 (H2C) / 7.8 (C2H) at 1 MB
+    (paper_pcie_bram, MB, 1, Direction.H2C, 7.54, 0.25),
+    (paper_pcie_bram, MB, 1, Direction.C2H, 7.77, 0.25),
+]
+
+
+@pytest.mark.parametrize("model,size,ch,direction,paper,tol", ANCHORS)
+def test_model_matches_paper_anchor(model, size, ch, direction, paper, tol):
+    got = bandwidth_gbps(model(), size, ch, direction)
+    assert abs(got - paper) / paper < tol, (got, paper)
+
+
+def test_bandwidth_rises_with_size():
+    m = paper_pcie_ddr4()
+    sizes = [1 << 12, 1 << 16, 1 << 20, 1 << 24]
+    bws = [bandwidth_gbps(m, s, 1, Direction.C2H) for s in sizes]
+    assert all(a < b for a, b in zip(bws, bws[1:]))
+
+
+def test_multichannel_aggregates_with_diminishing_returns():
+    m = paper_pcie_ddr4()
+    b = [bandwidth_gbps(m, 8 * MB, c, Direction.C2H) for c in (1, 2, 4, 8)]
+    assert b[0] < b[1] < b[2] <= b[3] + 1e-9
+    assert (b[1] - b[0]) > (b[3] - b[2])  # diminishing
+    assert b[3] <= m.link_gbps
+
+
+def test_c2h_beats_h2c():
+    m = paper_pcie_ddr4()
+    assert bandwidth_gbps(m, MB, 1, Direction.C2H) > \
+        bandwidth_gbps(m, MB, 1, Direction.H2C)
+
+
+def test_contention_factor_matches_paper():
+    """Fig 11: 10.8 -> ~9.5 GB/s when the second master is present."""
+    m = paper_pcie_ddr4()
+    free = bandwidth_gbps(m, 4 * MB, 1, Direction.H2C)
+    busy = bandwidth_gbps(m, 4 * MB, 1, Direction.H2C, contended=True)
+    assert 0.8 < busy / free < 0.95
+
+
+def test_tpu_paths_ordering():
+    """HBM > host PCIe; ICI between them for small messages."""
+    host = bandwidth_gbps(tpu_host_path(), 16 * MB, 4, Direction.C2H)
+    ici = bandwidth_gbps(tpu_ici_path(), 16 * MB, 1, Direction.C2H)
+    assert host < 32.0
+    assert ici < 50.0
+    assert ici > host  # ICI link faster than PCIe host path

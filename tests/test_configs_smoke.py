@@ -1,0 +1,96 @@
+"""Per-arch smoke: reduced config, one forward/train step, shapes + no NaNs.
+
+Full configs are exercised only via the dry-run (ShapeDtypeStruct); these
+reduced configs share the family code paths (GQA/bias/M-RoPE/MoE/wkv/RG-LRU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, reduce_for_smoke, \
+    shape_applicable
+from repro.models import lm
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def make_batch(cfg, with_labels=True):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.vision_stub:
+        batch["vision_embeds"] = jax.random.normal(
+            KEY, (B, S, cfg.d_model), jnp.bfloat16)
+        batch["vision_mask"] = jnp.zeros((B, S), jnp.bool_).at[:, :8].set(True)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = T.tree_init(T.param_defs(cfg), cfg, KEY)
+    batch = make_batch(cfg)
+    logits, _, aux = lm.forward(cfg, params, batch, mode="train")
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    opt = AdamW(lr=1e-3)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually changed
+    w0 = jax.tree.leaves(state["params"])[0]
+    w1 = jax.tree.leaves(state2["params"])[0]
+    assert not np.allclose(np.asarray(w0, np.float32),
+                           np.asarray(w1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-1.6b",
+                                  "recurrentgemma-2b", "qwen2-moe-a2.7b",
+                                  "qwen2-vl-7b"])
+def test_prefill_decode(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = T.tree_init(T.param_defs(cfg), cfg, KEY)
+    batch = make_batch(cfg, with_labels=False)
+    caches0 = T.init_cache(cfg, B, S + 8)
+    prefill = jax.jit(lm.make_prefill_step(cfg))
+    caches, last = prefill(params, batch, caches0)
+    assert last.shape == (B, cfg.vocab)
+    decode = jax.jit(lm.make_decode_step(cfg))
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    dbatch = {"tokens": tok, "pos": jnp.full((B, 1), S, jnp.int32)}
+    if cfg.attention is not None and cfg.attention.mrope_sections:
+        dbatch["pos"] = jnp.broadcast_to(
+            jnp.full((B, 1, 1), S, jnp.int32), (B, 1, 3))
+    caches, lg = decode(params, dbatch, caches)
+    assert lg.shape == (B, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg.astype(jnp.float32))))
+
+
+def test_long_500k_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §7)."""
+    shape = SHAPES["long_500k"]
+    expected_run = {"rwkv6-1.6b", "recurrentgemma-2b"}
+    for arch in ARCHS:
+        ok, why = shape_applicable(get_config(arch), shape)
+        assert ok == (arch in expected_run), (arch, why)
+
+
+def test_param_counts_match_published():
+    targets = {"qwen2-0.5b": 0.494e9, "llama3-8b": 8.03e9,
+               "qwen2.5-14b": 14.8e9, "grok-1-314b": 316e9,
+               "rwkv6-1.6b": 1.6e9, "qwen2-moe-a2.7b": 14.3e9}
+    for arch, want in targets.items():
+        cfg = get_config(arch)
+        ab = T.tree_abstract(T.param_defs(cfg), cfg)
+        got = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(ab))
+        assert abs(got - want) / want < 0.06, (arch, got, want)
+    # MoE active < total
+    moe = get_config("qwen2-moe-a2.7b")
+    assert moe.n_active_params < 0.25 * moe.n_params

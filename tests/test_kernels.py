@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,S,H,KV,dh,causal,window", [
+    (2, 256, 4, 2, 64, True, None),     # GQA causal
+    (1, 512, 8, 8, 64, True, None),     # MHA longer seq
+    (2, 256, 4, 1, 128, True, 128),     # MQA sliding window
+    (1, 256, 4, 4, 64, False, None),    # bidirectional
+    (1, 128, 2, 2, 64, True, None),     # small
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, S, H, KV, dh, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128, interpret=True)
+    ref = ops.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_logit_cap():
+    ks = jax.random.split(KEY, 3)
+    q = 5.0 * jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = 5.0 * jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, logit_cap=30.0, block_q=64,
+                              block_k=64, interpret=True)
+    ref = ops.attention_ref(q, k, v, logit_cap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@pytest.mark.parametrize("R,C,br,nb", [
+    (64, 128, 8, 1), (64, 128, 8, 2), (256, 256, 32, 4),
+    (128, 128, 128, 2), (64, 256, 16, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_stream_copy_identity(R, C, br, nb, dtype):
+    if dtype == jnp.int32:
+        x = jax.random.randint(KEY, (R, C), 0, 1000, jnp.int32)
+    else:
+        x = jax.random.normal(KEY, (R, C), dtype)
+    y = ops.stream_copy(x, block_rows=br, n_buffers=nb, interpret=True)
+    ref = ops.stream_copy_ref(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,T,W,bt,bw", [
+    (2, 64, 128, 16, 128), (1, 128, 256, 64, 128), (3, 32, 128, 32, 128),
+    (1, 64, 512, 8, 256),
+])
+def test_rg_lru_scan_matches_ref(B, T, W, bt, bw):
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, T, W), jnp.float32, 0.5, 0.999)
+    b = jax.random.normal(ks[1], (B, T, W), jnp.float32)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    got = ops.rg_lru_scan(a, b, h0, block_t=bt, block_w=bw, interpret=True)
+    want = ops.rg_lru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_rg_lru_no_initial_state():
+    a = jnp.full((1, 16, 128), 0.9)
+    b = jnp.ones((1, 16, 128))
+    got = ops.rg_lru_scan(a, b, None, block_t=8, block_w=128, interpret=True)
+    want = ops.rg_lru_scan_ref(a, b, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,92 @@
+"""AdamW math, schedules, dtype policies; gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW, for_arch
+from repro.optim.compression import (EFState, compress_for_allreduce,
+                                     dequantize_int8, ef_compress, ef_init,
+                                     quantize_int8)
+
+
+def test_adamw_first_step_matches_closed_form():
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                warmup_steps=1, decay_steps=10**9)
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 0.5)}
+    new_p, st = opt.update(p, g, opt.init(p), jnp.zeros((), jnp.int32))
+    # bias-corrected m/bc1 = g, v/bc2 = g^2 -> update = g/(|g|+eps) = 1
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - 0.1, rtol=1e-5)
+
+
+def test_adamw_weight_decay_skips_vectors():
+    opt = AdamW(lr=0.1, weight_decay=0.5, warmup_steps=1, decay_steps=10**9)
+    p = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    new_p, _ = opt.update(p, g, opt.init(p), jnp.zeros((), jnp.int32))
+    assert float(new_p["w"][0, 0]) < 1.0   # decayed
+    assert float(new_p["b"][0]) == 1.0     # 1-D: no decay
+
+
+def test_schedule_warmup_and_decay():
+    opt = AdamW(lr=1.0, warmup_steps=10, decay_steps=100, min_lr_frac=0.1)
+    lr0 = float(opt.schedule(jnp.asarray(0)))
+    lr9 = float(opt.schedule(jnp.asarray(9)))
+    lr_end = float(opt.schedule(jnp.asarray(1000)))
+    assert lr0 < lr9 <= 1.0
+    assert np.isclose(lr_end, 0.1, rtol=1e-3)
+
+
+def test_bf16_state_and_master_weights():
+    opt = AdamW(lr=1e-2, state_dtype="bfloat16", master_weights=True,
+                warmup_steps=1, decay_steps=10**9, weight_decay=0.0)
+    p = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st = opt.init(p)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    assert st["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((8,), 0.25, jnp.bfloat16)}
+    new_p, st2 = opt.update(p, g, st, jnp.zeros((), jnp.int32))
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert st2["master"]["w"].dtype == jnp.float32
+
+
+def test_for_arch_grok_policy():
+    assert for_arch("grok-1-314b").state_dtype == "bfloat16"
+    assert for_arch("llama3-8b").state_dtype == "float32"
+
+
+class TestCompression:
+    def test_int8_roundtrip_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3.0
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_telescopes(self):
+        """Sum of EF-compressed grads converges to sum of true grads."""
+        key = jax.random.PRNGKey(1)
+        grads = [{"w": 0.1 * jax.random.normal(jax.random.fold_in(key, i),
+                                               (64,))} for i in range(30)]
+        st = ef_init(grads[0])
+        acc_q = np.zeros(64)
+        acc_true = np.zeros(64)
+        for g in grads:
+            qt, st = ef_compress(g, st)
+            acc_q += np.asarray(dequantize_int8(*jax.tree.leaves(
+                qt, is_leaf=lambda x: isinstance(x, tuple))[0]))
+            acc_true += np.asarray(g["w"])
+        resid = np.abs(np.asarray(jax.tree.leaves(st.residual)[0]))
+        np.testing.assert_allclose(acc_q + resid * 0, acc_true,
+                                   atol=float(resid.max()) + 1e-3)
+
+    def test_hook_schemes(self):
+        g = {"w": jnp.ones((16,), jnp.float32)}
+        wire, dec, _ = compress_for_allreduce(g, "bf16")
+        assert jax.tree.leaves(wire)[0].dtype == jnp.bfloat16
+        back = dec(wire)
+        np.testing.assert_allclose(np.asarray(back["w"]), 1.0)
+        st = ef_init(g)
+        wire, dec, st2 = compress_for_allreduce(g, "int8_ef", st)
+        back = dec(wire)
+        np.testing.assert_allclose(np.asarray(back["w"]), 1.0, atol=0.02)

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptors import Descriptor, SGList, gather, \
+    spans_for_packing
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+@st.composite
+def sg_lists(draw):
+    n = draw(st.integers(1, 12))
+    descs = []
+    dst = 0
+    src_max = 0
+    for _ in range(n):
+        size = draw(st.integers(1, 64))
+        src = draw(st.integers(0, 256))
+        descs.append(Descriptor(src, dst, size))
+        dst += size + draw(st.integers(0, 8))
+        src_max = max(src_max, src + size)
+    return SGList(descs), src_max, dst
+
+
+@given(sg_lists())
+@settings(**SETTINGS)
+def test_chunk_preserves_coverage(data):
+    sg, src_max, dst_max = data
+    ch = sg.chunked(7)
+    assert ch.total_bytes == sg.total_bytes
+    src = np.random.default_rng(0).integers(0, 255, src_max + 1,
+                                            dtype=np.uint8)
+    a = gather(src, sg, dst_size=dst_max + 1)
+    b = gather(src, ch, dst_size=dst_max + 1)
+    np.testing.assert_array_equal(a, b)
+
+
+@given(sg_lists())
+@settings(**SETTINGS)
+def test_coalesce_preserves_semantics(data):
+    sg, src_max, dst_max = data
+    co = sg.coalesced()
+    assert len(co) <= len(sg)
+    src = np.random.default_rng(1).integers(0, 255, src_max + 1,
+                                            dtype=np.uint8)
+    a = gather(src, sg, dst_size=dst_max + 1)
+    b = gather(src, co, dst_size=dst_max + 1)
+    np.testing.assert_array_equal(a, b)
+
+
+@given(sg_lists(), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_round_robin_partitions_exactly(data, n):
+    sg, _, _ = data
+    parts = sg.round_robin(n)
+    assert sum(len(p) for p in parts) == len(sg)
+    assert sum(p.total_bytes for p in parts) == sg.total_bytes
+
+
+@given(st.lists(st.integers(1, 50), min_size=1, max_size=20),
+       st.integers(4, 32))
+@settings(**SETTINGS)
+def test_packing_covers_all_tokens_in_order(lengths, seq_len):
+    sg, rows = spans_for_packing(lengths, seq_len)
+    total = sum(lengths)
+    assert sg.total_bytes == total * 4
+    # gathering the identity corpus returns tokens in order, row-major
+    src = np.arange(total, dtype=np.int32)
+    n_rows = -(-total // seq_len)
+    out = gather(src, sg, dst_size=n_rows * seq_len * 4).view(np.int32)
+    np.testing.assert_array_equal(out[:total], src)
+    sg.validate(src_size=total * 4, dst_size=n_rows * seq_len * 4)
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=128))
+@settings(**SETTINGS)
+def test_quantize_int8_error_bound(xs):
+    import jax.numpy as jnp
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-5
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_resolve_spec_always_divides(d1, d2, axis):
+    """Any resolved sharding must evenly divide the dim it shards."""
+    from jax.sharding import AbstractMesh
+    from repro.sharding import TRAIN_RULES, resolve_spec
+    # resolve_spec only consults shape/axis_names: AbstractMesh suffices
+    mesh = AbstractMesh((4, 4), ("data", "model"))
+    spec = resolve_spec((d1 * axis, d2), ("d_ff", "d_model"), mesh,
+                        TRAIN_RULES)
+    for dim, entry in zip((d1 * axis, d2), spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        assert dim % n == 0

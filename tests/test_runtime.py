@@ -1,0 +1,95 @@
+"""Fault tolerance + elastic scaling unit tests."""
+import time
+
+import pytest
+
+from repro.runtime.elastic import largest_pow2_leq, plan_resize
+from repro.runtime.fault import (Heartbeat, StepFailure, StepGuard,
+                                 StragglerMonitor)
+
+
+class TestStepGuard:
+    def test_retries_then_succeeds(self):
+        calls = {"n": 0}
+
+        def flaky(state, x):
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient")
+            return state + x
+
+        g = StepGuard(max_retries=2)
+        assert g.run(flaky, 1, 2) == 3
+        assert g.failures == 2
+
+    def test_restore_path(self):
+        def always_fail_on_bad_state(state, x):
+            if state == "corrupt":
+                raise RuntimeError("bad state")
+            return state + x
+
+        g = StepGuard(max_retries=1, on_restore=lambda: 10)
+        assert g.run(always_fail_on_bad_state, "corrupt", 5) == 15
+        assert g.restores == 1
+
+    def test_raises_without_restore(self):
+        g = StepGuard(max_retries=1)
+        with pytest.raises(StepFailure):
+            g.run(lambda s: (_ for _ in ()).throw(RuntimeError("x")), None)
+
+
+class TestStraggler:
+    def test_flags_slow_step(self):
+        m = StragglerMonitor(threshold=2.0, warmup=2)
+        for i in range(5):
+            assert not m.record(i, 1.0)
+        assert m.record(5, 3.0)
+        assert m.stragglers == [5]
+        # baseline unpolluted by the straggler sample
+        assert m.ewma < 1.5
+
+    def test_warmup_never_flags(self):
+        m = StragglerMonitor(warmup=3)
+        assert not m.record(0, 1.0)
+        assert not m.record(1, 100.0)
+
+
+class TestHeartbeat:
+    def test_dead_worker_detection(self):
+        hb = Heartbeat(timeout_s=10.0)
+        hb.beat(0, t=100.0)
+        hb.beat(1, t=105.0)
+        assert hb.dead_workers(now=112.0) == [0]
+        assert hb.dead_workers(now=120.0) == [0, 1]
+
+
+class TestElastic:
+    def test_plan_keeps_model_axis(self):
+        plan = plan_resize(alive_workers=[0, 1, 2, 3], chips_per_worker=64,
+                           model_parallel=16, global_batch=256)
+        assert plan.mesh_shape == (16, 16)
+        assert plan.num_shards == 4
+        assert sorted(plan.data_shards.values()) == [0, 1, 2, 3]
+
+    def test_plan_after_losing_workers(self):
+        plan = plan_resize(alive_workers=[0, 2, 3], chips_per_worker=64,
+                           model_parallel=16, global_batch=256)
+        data, model = plan.mesh_shape
+        assert model == 16
+        assert data * model <= 3 * 64
+        assert 256 % data == 0
+        assert plan.data_shards == {0: 0, 2: 1, 3: 2}
+
+    def test_plan_shrinks_tp_when_needed(self):
+        plan = plan_resize(alive_workers=[0], chips_per_worker=8,
+                           model_parallel=16, global_batch=64)
+        assert plan.mesh_shape[1] <= 8
+
+    def test_no_workers_raises(self):
+        with pytest.raises(ValueError):
+            plan_resize([], 8, 4, 64)
+
+    def test_pow2(self):
+        assert largest_pow2_leq(9) == 8
+        assert largest_pow2_leq(16) == 16
+        assert largest_pow2_leq(1) == 1
