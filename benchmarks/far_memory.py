@@ -1,0 +1,78 @@
+"""Far-memory tier sweep: the paper's local-DMA vs RDMA contrast.
+
+Sweeps transfer size x tier x doorbell-batch depth:
+
+* ``local``  — host DRAM through the XDMA-style ``MemoryEngine`` (H2C+C2H
+  round trip), projected on the PCIe host path model;
+* ``remote`` — a ``MemoryNode`` through one-sided verbs, at several
+  doorbell batch depths, projected on the far-memory (RDMA) path model
+  with the per-doorbell setup amortized across the batch.
+
+Reproduces the paper's qualitative result as a first-class row set: the
+DMA path wins on raw bandwidth, the verbs path pays a per-op setup that
+doorbell batching amortizes away — and emits fewer completions than WRs
+while doing so.
+
+    PYTHONPATH=src python -m benchmarks.far_memory [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.analytical import (bandwidth_gbps, doorbell_bandwidth_gbps,
+                                   far_memory_path, tpu_host_path)
+from repro.core.channels import Direction
+from repro.core.engine import MemoryEngine
+from repro.rmem import MemoryNode, MemoryRegion, QueuePair
+
+
+def _local_rows(sizes) -> None:
+    with MemoryEngine(n_channels=2) as eng:
+        for size in sizes:
+            x = np.ones(size // 4, np.float32)
+
+            def rt():
+                dev = eng.write(x).wait()
+                eng.read(dev).wait()
+            t = time_call(rt, repeats=3)
+            proj = bandwidth_gbps(tpu_host_path(), size, 2, Direction.C2H)
+            emit(f"farmem_local_{size >> 10}KB", t * 1e6,
+                 f"meas={2 * size / t / 1e9:.2f}GB/s host_model={proj:.1f}GB/s")
+
+
+def _remote_rows(sizes, batches) -> None:
+    for size in sizes:
+        for batch in batches:
+            with MemoryNode("bench", size * batch + 4096) as node:
+                mr = MemoryRegion(np.ones(size * batch, np.uint8))
+                qp = QueuePair(node, doorbell_batch=batch)
+                base = node.alloc(size * batch)
+
+                def burst():
+                    for i in range(batch):
+                        qp.post_write(mr, i * size, base + i * size, size)
+                    qp.flush()
+                t = time_call(burst, repeats=3)
+                per_wr = t / batch
+                proj = doorbell_bandwidth_gbps(far_memory_path(), size, batch)
+                emit(f"farmem_remote_{size >> 10}KB_db{batch}", per_wr * 1e6,
+                     f"meas={size / per_wr / 1e9:.2f}GB/s "
+                     f"rmem_model={proj:.1f}GB/s "
+                     f"wrs={qp.wrs_posted} compl={qp.cq.n_completions}")
+
+
+def run(quick: bool = False) -> None:
+    sizes = [1 << 16, 1 << 20] if quick else [1 << 16, 1 << 18, 1 << 20,
+                                              1 << 22]
+    batches = [1, 4] if quick else [1, 4, 16]
+    _local_rows(sizes)
+    _remote_rows(sizes, batches)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    print("name,us_per_call,derived")
+    run(quick=ap.parse_args().quick)

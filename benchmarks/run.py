@@ -12,7 +12,7 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (completion_modes, contention, e2e_step,
+from benchmarks import (completion_modes, contention, e2e_step, far_memory,
                         host_device_bw, offload_step, rdma_analogue,
                         vmem_stream)
 
@@ -23,6 +23,7 @@ MODULES = [
     ("fig13_14_completion_modes", completion_modes),
     ("fig19_20_rdma_analogue", rdma_analogue),
     ("tab1_offload_step", offload_step),
+    ("farmem_tier_sweep", far_memory),
     ("e2e_and_roofline", e2e_step),
 ]
 

@@ -12,6 +12,11 @@ training resumes while bytes drain, the paper's C2H pattern (DESIGN.md §3.2).
 
 Arrays are saved *unsharded* (global view), so restore works under any mesh
 or world size — this is what makes elastic restarts trivial.
+
+``save_far``/``restore_far`` spill a snapshot to a far-memory node instead
+of disk (DESIGN.md §4.4): the C2H drain is unchanged, but leaves land in
+NIC-attached DRAM through one-sided verbs — a diskless checkpoint on the
+rmem tier, restorable by any host that can reach the node.
 """
 from __future__ import annotations
 
@@ -26,6 +31,15 @@ import jax
 import numpy as np
 
 from repro.core.engine import MemoryEngine
+
+
+def _flatten_with_path(tree):
+    # jax.tree.flatten_with_path only exists on newer jax; 0.4.37 has the
+    # tree_util spelling.
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree)
 
 
 def _leaf_name(path) -> str:
@@ -54,7 +68,7 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, block: bool = True) -> None:
         self.wait()  # one async save at a time
-        leaves_dev, treedef = jax.tree.flatten_with_path(tree)
+        leaves_dev, treedef = _flatten_with_path(tree)
         paths = [p for p, _ in leaves_dev]
         join = self.engine.read_tree_async([l for _, l in leaves_dev])
 
@@ -116,6 +130,87 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
 
+    # -- far-memory spill ----------------------------------------------------
+    def save_far(self, step: int, tree: Any, node,
+                 doorbell_batch: int = 8,
+                 reuse: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Spill a snapshot to a ``repro.rmem.MemoryNode``.
+
+        Returns the manifest needed by ``restore_far`` (leaf name ->
+        node address); digests guard the far copy exactly like the disk
+        path.  Leaves are posted as one-sided writes with doorbell
+        batching and fenced once at the end.
+
+        Node memory is bump-allocated, so periodic checkpointing must
+        pass the previous ``save_far`` manifest as ``reuse``: leaves
+        with matching name/size overwrite their old addresses in place
+        instead of growing the node (``MemoryNode.reset()`` is the
+        coarse alternative when the node holds nothing else).
+        """
+        from repro.rmem.verbs import MemoryRegion, QueuePair
+        self.wait()
+        reuse_addrs = {e["name"]: e for e in reuse["leaves"]} if reuse \
+            else {}
+        leaves_dev, treedef = _flatten_with_path(tree)
+        host_leaves = self.engine.read_tree_async(
+            [l for _, l in leaves_dev])()
+        qp = QueuePair(node, doorbell_batch=doorbell_batch)
+        entries: List[Dict[str, Any]] = []
+        keepalive = []                     # MRs must outlive the doorbell
+        for (path, _), leaf in zip(leaves_dev, host_leaves):
+            arr = np.asarray(leaf)
+            # ascontiguousarray promotes 0-d to (1,): record shape first
+            flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+            name = _leaf_name(path)
+            prev = reuse_addrs.get(name)
+            if prev is not None and prev["nbytes"] == arr.nbytes:
+                addr = prev["addr"]
+            else:
+                addr = node.alloc(max(arr.nbytes, 1))
+            mr = MemoryRegion(flat if arr.nbytes else np.zeros(1, np.uint8))
+            keepalive.append(mr)
+            qp.post_write(mr, 0, addr, max(arr.nbytes, 1))
+            entry = {"name": name, "addr": addr,
+                     "nbytes": arr.nbytes, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)}
+            if self.digest:
+                entry["sha256"] = hashlib.sha256(
+                    arr.tobytes()).hexdigest()[:16]
+            entries.append(entry)
+        qp.flush()
+        return {"step": step, "node": node.name, "leaves": entries,
+                "bytes": sum(e["nbytes"] for e in entries),
+                "qp": qp.stats()}
+
+    def restore_far(self, like: Any, manifest: Dict[str, Any],
+                    node) -> Tuple[int, Any]:
+        """Pull a ``save_far`` snapshot back from the node into ``like``'s
+        structure, verifying digests."""
+        import jax.numpy as jnp
+        from repro.rmem.verbs import MemoryRegion, QueuePair
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        leaves_like, treedef = _flatten_with_path(like)
+        qp = QueuePair(node)
+        out = []
+        for path, leaf in leaves_like:
+            name = _leaf_name(path)
+            if name not in by_name:
+                raise KeyError(f"leaf {name} missing from far snapshot")
+            e = by_name[name]
+            raw = np.zeros(max(e["nbytes"], 1), np.uint8)
+            qp.read(MemoryRegion(raw), 0, e["addr"], max(e["nbytes"], 1))
+            raw = raw[:e["nbytes"]]
+            if self.digest and "sha256" in e:
+                h = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
+                if h != e["sha256"]:
+                    raise IOError(f"far digest mismatch for {name}")
+            arr = raw.view(jnp.dtype(e["dtype"])).reshape(e["shape"])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch {name}: far {arr.shape} "
+                                 f"vs model {leaf.shape}")
+            out.append(jax.device_put(arr))
+        return manifest["step"], jax.tree.unflatten(treedef, out)
+
     # -- restore --------------------------------------------------------------
     def all_steps(self) -> List[int]:
         out = []
@@ -145,7 +240,7 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         by_name = {e["name"]: e for e in manifest["leaves"]}
-        leaves_like, treedef = jax.tree.flatten_with_path(like)
+        leaves_like, treedef = _flatten_with_path(like)
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves_like))
         out = []

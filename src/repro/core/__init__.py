@@ -5,19 +5,38 @@ Public API:
     Channel, ChannelPool, Direction, CompletionMode (XDMA multi-channel)
     FunctionQueue, QueueEngine                      (QDMA queue model)
     MemoryEngine                                    (unified facade)
-    HostOffloadedOptimizer, KVPager                 (production offload paths)
+    HostOffloadedOptimizer, KVPager, TieredStore    (production offload paths)
+
+The far-memory tier (RDMA-style verbs, memory nodes, remote backends)
+lives in ``repro.rmem`` (DESIGN.md §4); ``TieredStore``/``KVPager`` accept
+its backends to page against it.  The offload names resolve lazily so the
+core<->rmem dependency stays one-way at import time (rmem modules import
+core submodules; only the offload paths pull rmem back in).
 """
+import importlib
+
 from repro.core.channels import (Channel, ChannelPool, CompletionMode,
                                  Direction, Transfer)
 from repro.core.descriptors import (Descriptor, SGList, gather,
                                     spans_for_packing)
 from repro.core.engine import MemoryEngine
-from repro.core.offload import HostOffloadedOptimizer, KVPager
 from repro.core.queues import FunctionQueue, QueueEngine
+
+_LAZY = {
+    "HostOffloadedOptimizer": "repro.core.offload",
+    "KVPager": "repro.core.offload",
+    "TieredStore": "repro.rmem.store",
+}
 
 __all__ = [
     "Channel", "ChannelPool", "CompletionMode", "Direction", "Transfer",
     "Descriptor", "SGList", "gather", "spans_for_packing",
-    "MemoryEngine", "HostOffloadedOptimizer", "KVPager",
+    "MemoryEngine", "HostOffloadedOptimizer", "KVPager", "TieredStore",
     "FunctionQueue", "QueueEngine",
 ]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

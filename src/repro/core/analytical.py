@@ -21,6 +21,7 @@ TPU-part numbers from CPU-container measurements.  The model:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 from repro.core.channels import Direction
@@ -79,6 +80,35 @@ def tpu_ici_path() -> PathModel:
     """Chip<->chip ICI (the 'RDMA' analogue — easy API, distinct link)."""
     return PathModel(link_gbps=get_part("tpu_v5e")["ici"].bw_gbps,
                      t0_us=2.0, single_eff=0.85, max_eff=0.95, c2h_boost=1.0)
+
+
+def far_memory_path() -> PathModel:
+    """NIC-attached DRAM behind one-sided RDMA verbs (the rmem tier).
+
+    Anchored on a 100 Gb/s RNIC (12.5 GB/s) with the short per-verb setup
+    one-sided ops show on off-path SmartNICs (arXiv:2212.07868): higher
+    single-op efficiency than a DMA descriptor ring, no H2C/C2H asymmetry
+    (both directions are initiator-driven reads/writes of remote DRAM).
+    """
+    return PathModel(link_gbps=12.5, t0_us=3.0, single_eff=0.80,
+                     max_eff=0.92, c2h_boost=1.0, contention_factor=0.90)
+
+
+def doorbell_bandwidth_gbps(m: PathModel, size_bytes: int, batch: int = 1,
+                            channels: int = 1,
+                            direction: Direction = Direction.C2H,
+                            contended: bool = False) -> float:
+    """Bandwidth with the per-doorbell setup amortized over ``batch`` WRs.
+
+    Doorbell batching rings once for ``batch`` posted work requests, so the
+    ``t0`` setup/doorbell cost is paid once per batch — the rmem analogue
+    of descriptor coalescing, and the knob ``benchmarks/far_memory.py``
+    sweeps.  ``size_bytes`` is the size of ONE work request.
+    """
+    if batch < 1:
+        raise ValueError(batch)
+    eff = dataclasses.replace(m, t0_us=m.t0_us / batch)
+    return bandwidth_gbps(eff, size_bytes, channels, direction, contended)
 
 
 def project(measured_gbps: float, cpu_ceiling_gbps: float,

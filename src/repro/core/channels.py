@@ -49,6 +49,13 @@ class Transfer:
     t_done: float = 0.0
 
     def _chunk_done(self, idx: int, out, nbytes: int) -> None:
+        """Record one finished chunk; ``out`` may be an Exception.
+
+        Failed chunks flow through here too, so a multi-chunk transfer
+        with one bad chunk still counts down ``_done``, sets the event,
+        and fires ``on_complete`` — waiters see the error from
+        ``result()`` instead of hanging.
+        """
         with self._lock:
             self._results.append((idx, out))
             self._bytes += nbytes
@@ -123,9 +130,7 @@ class Channel:
                 self.bytes_moved += nbytes
                 transfer._chunk_done(idx, out, nbytes)
             except Exception as e:  # surface errors to the waiter
-                transfer._results.append((idx, e))
-                transfer.t_done = time.perf_counter()
-                transfer._event.set()
+                transfer._chunk_done(idx, e, 0)
 
     def close(self) -> None:
         if self._alive:

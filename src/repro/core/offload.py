@@ -1,28 +1,30 @@
 """Host-offload built on the NMA engine: optimizer state + KV-cache paging.
 
-These are the two production uses of host DRAM as the third memory tier
-(DESIGN.md §3): exactly the SmartNIC-DRAM pattern of the paper's Table 1
-workloads, with the ChannelPool playing the XDMA engine.
+These are the two production uses of the colder memory tiers (DESIGN.md
+§3): exactly the SmartNIC-DRAM pattern of the paper's Table 1 workloads,
+with the ChannelPool playing the XDMA engine.
 
 ``HostOffloadedOptimizer`` keeps AdamW moments (+ optional fp32 master) in
 host RAM.  Each step: H2C-stream state in (overlapped across leaves — while
 leaf i updates on device, leaf i+1 is in flight), update, C2H-stream back.
 
 ``KVPager`` page-granular KV-cache residency manager for long-context
-serving: hot pages in HBM slots, cold pages in host RAM; descriptor-driven
-moves through a QDMA function queue.
+serving: hot pages in HBM slots, cold pages behind a pluggable tier
+backend — host RAM by default, far-memory nodes via RDMA-style verbs with
+``backend=rmem.RemoteBackend(...)``.  Since the rmem refactor it is a thin
+alias over ``repro.rmem.store.TieredStore`` (DESIGN.md §4.3), kept for the
+established constructor spelling (``n_hbm_slots``).
 """
 from __future__ import annotations
 
-import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.channels import ChannelPool, Direction
 from repro.core.engine import MemoryEngine
+from repro.rmem.backend import TierBackend
+from repro.rmem.store import TieredStore
 
 
 class HostOffloadedOptimizer:
@@ -81,87 +83,35 @@ class HostOffloadedOptimizer:
         return sum(l.nbytes for l in jax.tree.leaves(self.host_state))
 
 
-class KVPager:
-    """Page-granular KV residency: HBM slots + host backing store.
+class KVPager(TieredStore):
+    """Page-granular KV residency: HBM slots over a pluggable cold tier.
 
-    Layout: per layer, the cache is split into pages of ``page_tokens``
-    tokens.  ``n_hbm_slots`` pages stay device-resident; the rest live in
-    host RAM.  ``ensure(pages)`` makes the requested pages resident (H2C),
-    evicting LRU pages (C2H) as needed — transfer sizes are exactly the
-    paper's sweep knob.
+    The KV cache is split into fixed-size pages; ``n_hbm_slots`` pages stay
+    device-resident and ``ensure(pages)`` makes the requested pages
+    resident (H2C), evicting LRU pages (C2H) as needed — transfer sizes
+    are exactly the paper's sweep knob.  The cold side defaults to host
+    RAM; pass ``backend=repro.rmem.RemoteBackend(...)`` to page against
+    far-memory nodes instead.
     """
 
     def __init__(self, n_pages: int, page_shape: Tuple[int, ...],
                  dtype="bfloat16", n_hbm_slots: int = 8,
-                 engine: Optional[MemoryEngine] = None):
-        if n_hbm_slots < 1:
-            raise ValueError(n_hbm_slots)
-        self.n_pages = n_pages
-        self.page_shape = tuple(page_shape)
-        self.dtype = jnp.dtype(dtype)
-        self.n_hbm_slots = min(n_hbm_slots, n_pages)
-        self.engine = engine or MemoryEngine(n_channels=2)
-        itemsize = self.dtype.itemsize
-        self.page_bytes = int(np.prod(self.page_shape)) * itemsize
-        # host backing store for every page
-        self.host = np.zeros((n_pages,) + self.page_shape,
-                             np.dtype(self.dtype.name))
-        # device slots
-        self.slots: List[Optional[jax.Array]] = [None] * self.n_hbm_slots
-        self.slot_of_page: Dict[int, int] = {}
-        self.page_in_slot: List[Optional[int]] = [None] * self.n_hbm_slots
-        self._clock = 0
-        self._last_use = [0] * self.n_hbm_slots
-        self.h2c_bytes = 0
-        self.c2h_bytes = 0
-
-    def write_page(self, page: int, value) -> None:
-        """Update a page (host store + device copy if resident)."""
-        self.host[page] = np.asarray(value, self.host.dtype)
-        if page in self.slot_of_page:
-            s = self.slot_of_page[page]
-            self.slots[s] = self.engine.write(self.host[page]).wait()
-
-    def _evict(self) -> int:
-        s = min(range(self.n_hbm_slots), key=lambda i: self._last_use[i])
-        old = self.page_in_slot[s]
-        if old is not None:
-            self.host[old] = self.engine.read(self.slots[s]).wait()
-            self.c2h_bytes += self.page_bytes
-            del self.slot_of_page[old]
-        self.page_in_slot[s] = None
-        return s
-
-    def ensure(self, pages) -> Dict[int, jax.Array]:
-        """Make pages resident; returns {page: device_array}."""
-        if len(set(pages)) > self.n_hbm_slots:
-            raise ValueError(f"requested {len(set(pages))} pages > "
-                             f"{self.n_hbm_slots} HBM slots")
-        missing = [p for p in pages if p not in self.slot_of_page]
-        # stage all H2C transfers first (multi-channel overlap), then place;
-        # bumping _last_use at assignment keeps one batch from re-evicting a
-        # slot whose H2C is still in flight
-        pending = []
-        for p in missing:
-            if p < 0 or p >= self.n_pages:
-                raise IndexError(p)
-            s = self._evict()
-            self._clock += 1
-            self._last_use[s] = self._clock
-            pending.append((p, s, self.engine.write(self.host[p])))
-            self.page_in_slot[s] = p
-            self.slot_of_page[p] = s
-        for p, s, tr in pending:
-            self.slots[s] = tr.wait()
-            self.h2c_bytes += self.page_bytes
-        out = {}
-        for p in pages:
-            s = self.slot_of_page[p]
-            self._clock += 1
-            self._last_use[s] = self._clock
-            out[p] = self.slots[s]
-        return out
+                 engine: Optional[MemoryEngine] = None,
+                 backend: Optional[TierBackend] = None):
+        super().__init__(n_pages, page_shape, dtype=dtype,
+                         n_hot_slots=n_hbm_slots, engine=engine,
+                         backend=backend)
 
     @property
-    def resident_pages(self):
-        return sorted(self.slot_of_page)
+    def n_hbm_slots(self) -> int:
+        return self.n_hot_slots
+
+    @property
+    def host(self) -> np.ndarray:
+        """Typed view of the local-host cold store (seed-API compat)."""
+        mem = getattr(self.backend, "mem", None)
+        if mem is None:
+            raise AttributeError(
+                "KVPager.host only exists with a LocalHostBackend")
+        return mem.view(self._np_dtype).reshape(
+            (self.n_pages,) + self.page_shape)

@@ -101,26 +101,30 @@ class QueueEngine:
 
     def _scheduler(self) -> None:
         while not self._stop.is_set():
-            moved = False
-            with self._lock:
-                qs = list(self.queues.values())
-            for q in qs:
-                for _ in range(q.weight):
-                    item = q._pop()
-                    if item is None:
-                        break
-                    moved = True
-
-                    def fire(tr, item=item, q=q):
-                        q.completed += 1
-                        item.done.set()
-
-                    item.transfer = self.pool.submit(
-                        item.payload, item.direction,
-                        mode=CompletionMode.INTERRUPT, on_complete=fire)
-                    item.assigned.set()
-            if not moved:
+            if not self._drain_once():
                 time.sleep(0.0002)
+
+    def _drain_once(self) -> bool:
+        """One weighted-RR round: up to ``weight`` items per queue."""
+        moved = False
+        with self._lock:
+            qs = list(self.queues.values())
+        for q in qs:
+            for _ in range(q.weight):
+                item = q._pop()
+                if item is None:
+                    break
+                moved = True
+
+                def fire(tr, item=item, q=q):
+                    q.completed += 1
+                    item.done.set()
+
+                item.transfer = self.pool.submit(
+                    item.payload, item.direction,
+                    mode=CompletionMode.INTERRUPT, on_complete=fire)
+                item.assigned.set()
+        return moved
 
     def wait(self, item: WorkItem, timeout: float = 60.0):
         if not item.done.wait(timeout):

@@ -1,0 +1,10 @@
+"""jax version compatibility helpers shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params_cls():
+    # jax 0.4.37 renamed pltpu.CompilerParams -> TPUCompilerParams; newer
+    # jax renamed it back.  Accept either.
+    return getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
-from repro.launch.hlo import total_collective_bytes
+from repro.launch.hlo import cost_analysis_dict, total_collective_bytes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import serve_specs, train_specs, with_layers
 from repro.launch.traffic import modeled_bytes
@@ -86,7 +86,7 @@ def _compile_cell(cfg, shape, mesh, kind, unrolled=False):
         lowered = fn.lower(*ab)
         compiled = lowered.compile()
         dt = time.time() - t0
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     txt = compiled.as_text()
     coll_total, coll_per = total_collective_bytes(txt)
     return {

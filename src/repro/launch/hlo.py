@@ -88,6 +88,15 @@ def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
     return dict(out)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions: 0.4.x returns a
+    one-element list of dicts, newer jax returns the dict directly."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def total_collective_bytes(hlo_text: str) -> Tuple[float, Dict]:
     per = collective_bytes(hlo_text)
     return sum(v["operand_bytes"] for v in per.values()), per

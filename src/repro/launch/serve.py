@@ -2,12 +2,17 @@
 
 Requests enter a queue; a fixed-slot batch decodes in lockstep (one jit'd
 decode step for the whole batch).  Freed slots are refilled from the queue
-each iteration (continuous batching).  With ``--kv-paging``, per-slot KV
-pages spill to host RAM through the NMA engine while a slot waits — the
-paper's SmartNIC-DRAM pattern applied to long-context serving.
+each iteration (continuous batching).  With ``--kv-paging``, each admitted
+slot's prefilled KV cache is paged through a ``TieredStore`` — packed to a
+byte page, spilled to the cold tier, fetched back H2C, and installed from
+the device-resident page — so the cache crosses the paper's memory path
+before serving.  ``--kv-backend`` picks the cold tier: ``local`` (host
+RAM, the XDMA/QDMA pattern) or ``remote`` (far-memory nodes behind
+RDMA-style verbs, DESIGN.md §4).
 
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
-                  --arch qwen2-0.5b --smoke --requests 8 --max-new 16
+                  --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
+                  [--kv-paging --kv-backend remote]
 """
 from __future__ import annotations
 
@@ -24,6 +29,8 @@ import numpy as np
 from repro.configs import ARCHS, get_config, reduce_for_smoke
 from repro.models import lm
 from repro.models import transformer as T
+from repro.rmem.backend import make_backend
+from repro.rmem.store import TieredStore
 
 
 @dataclasses.dataclass
@@ -38,7 +45,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, kv_backend: Optional[str] = None,
+                 kv_nodes: int = 2, kv_doorbell: int = 4):
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -52,6 +60,19 @@ class ServeEngine:
         self.slot_left = np.zeros(batch_slots, np.int64)
         self.slot_pos = np.zeros(batch_slots, np.int64)
         self.cur_tokens = np.zeros((batch_slots, 1), np.int32)
+        # KV paging: one page per slot holding the packed prefill cache
+        self.pager: Optional[TieredStore] = None
+        if kv_backend is not None:
+            self._cache_template = T.init_cache(cfg, 1, max_len)
+            page_bytes = sum(l.nbytes
+                             for l in jax.tree.leaves(self._cache_template))
+            kw = dict(n_nodes=kv_nodes, doorbell_batch=kv_doorbell) \
+                if kv_backend == "remote" else {}
+            self.pager = TieredStore(
+                n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
+                n_hot_slots=batch_slots,
+                backend=make_backend(kv_backend, batch_slots, page_bytes,
+                                     **kw))
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.time()
@@ -82,6 +103,26 @@ class ServeEngine:
             out.append(b.at[tuple(idx)].set(o[tuple(src_idx)]))
         self.caches = jax.tree.unflatten(treedef, out)
 
+    def _page_cache(self, slot: int, caches1):
+        """Round-trip a slot's prefilled cache through the tiered store.
+
+        Pack to one byte page -> cold-tier store (host memcpy or one-sided
+        verbs) -> ``ensure`` fetches it back H2C -> unpack the
+        device-resident page into cache leaves.  Bit-exact by
+        construction, so serving output is invariant to the backend.
+        """
+        leaves, treedef = jax.tree.flatten(caches1)
+        packed = np.concatenate(
+            [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
+        self.pager.write_page(slot, packed)
+        dev_page = self.pager.ensure([slot])[slot]
+        out, off = [], 0
+        for l in leaves:
+            piece = jax.lax.slice(dev_page, (off,), (off + l.nbytes,))
+            out.append(piece.view(l.dtype).reshape(l.shape))
+            off += l.nbytes
+        return jax.tree.unflatten(treedef, out)
+
     def _admit(self) -> None:
         for s in range(self.B):
             if self.slot_req[s] is not None:
@@ -100,6 +141,8 @@ class ServeEngine:
             caches1 = T.init_cache(self.cfg, 1, self.max_len)
             caches1, logits = self.prefill_1(self.params, batch, caches1)
             tok = int(jnp.argmax(logits[0]))
+            if self.pager is not None:
+                caches1 = self._page_cache(s, caches1)
             self._slot_cache_set(s, caches1)
             self.slot_req[s] = req
             self.slot_left[s] = req.max_new - 1
@@ -132,6 +175,8 @@ class ServeEngine:
                 req.t_done = time.time()
                 self.done.append(req)
                 self.slot_req[s] = None
+                if self.pager is not None:
+                    self.pager.release(s)
             else:
                 self.cur_tokens[s, 0] = tok
         return len(active)
@@ -152,6 +197,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-paging", action="store_true",
+                    help="page each slot's prefill KV through a TieredStore")
+    ap.add_argument("--kv-backend", choices=["local", "remote"],
+                    default="local")
+    ap.add_argument("--kv-nodes", type=int, default=2,
+                    help="memory nodes for --kv-backend remote")
+    ap.add_argument("--kv-doorbell", type=int, default=4,
+                    help="doorbell batch depth for --kv-backend remote")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -159,7 +212,9 @@ def main(argv=None) -> dict:
         cfg = reduce_for_smoke(cfg)
     params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
-                      max_len=args.max_len)
+                      max_len=args.max_len,
+                      kv_backend=args.kv_backend if args.kv_paging else None,
+                      kv_nodes=args.kv_nodes, kv_doorbell=args.kv_doorbell)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for r in range(args.requests):
@@ -173,8 +228,20 @@ def main(argv=None) -> dict:
     print(f"[serve] {len(eng.done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s), p50 latency {np.median(lat):.2f}s",
           flush=True)
-    return {"requests": len(eng.done), "tokens": toks, "seconds": dt,
-            "tok_per_s": toks / dt}
+    result = {"requests": len(eng.done), "tokens": toks, "seconds": dt,
+              "tok_per_s": toks / dt,
+              "outputs": {r.rid: list(r.out_tokens) for r in eng.done}}
+    if eng.pager is not None:
+        kv = eng.pager.stats()
+        cold = kv["cold"]
+        print(f"[serve:kv-paging] tier={cold['tier']} "
+              f"stored={cold['bytes_stored']} loaded={cold['bytes_loaded']} "
+              f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
+              f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
+              flush=True)
+        result["kv"] = kv
+        eng.pager.close()
+    return result
 
 
 if __name__ == "__main__":

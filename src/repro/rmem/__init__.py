@@ -1,0 +1,26 @@
+"""rmem: the disaggregated far-memory tier (DESIGN.md §4).
+
+RDMA-style one-sided verbs onto NIC-attached memory nodes, plus the
+pluggable tier backend that lets the existing offload paths (KV paging,
+checkpointing) spill to host DRAM or far memory interchangeably.
+
+Public API:
+    MemoryRegion, QueuePair, CompletionQueue, WorkCompletion  (verbs)
+    MemoryNode, AddressMap, MapEntry                          (memory nodes)
+    TierBackend, LocalHostBackend, RemoteBackend, make_backend (backends)
+    TieredStore                                               (HBM over cold tier)
+"""
+from repro.rmem.backend import (LocalHostBackend, RemoteBackend, TierBackend,
+                                make_backend)
+from repro.rmem.node import AddressMap, MapEntry, MemoryNode
+from repro.rmem.store import TieredStore
+from repro.rmem.verbs import (CompletionQueue, MemoryRegion, OpCode,
+                              QueuePair, WCStatus, WorkCompletion)
+
+__all__ = [
+    "MemoryRegion", "QueuePair", "CompletionQueue", "WorkCompletion",
+    "OpCode", "WCStatus",
+    "MemoryNode", "AddressMap", "MapEntry",
+    "TierBackend", "LocalHostBackend", "RemoteBackend", "make_backend",
+    "TieredStore",
+]

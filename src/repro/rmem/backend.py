@@ -1,0 +1,223 @@
+"""Pluggable cold-tier backends for the tiered store (DESIGN.md §4.3).
+
+A ``TierBackend`` is where evicted/cold pages live — the axis the paper
+varies: host DRAM over PCIe DMA vs NIC-attached DRAM over RDMA-style
+verbs.  The hot tier (HBM) and the device staging path (``MemoryEngine``)
+are owned by ``TieredStore``; backends only store and load fixed-size byte
+pages and account their tier's traffic.
+
+``LocalHostBackend`` — pages in host RAM (what ``KVPager.host`` was): the
+paper's XDMA/QDMA pattern; cold-tier store/load is a host memcpy and all
+link cost sits on the H2C/C2H leg.
+
+``RemoteBackend`` — pages on one or more ``MemoryNode``s reached through a
+``QueuePair`` with doorbell batching: the paper's RDMA pattern; every
+store is a one-sided write and every load a one-sided read.
+
+Both report measured seconds plus *projected* seconds on their analytical
+path model (``core/analytical.py``), so benches can contrast container
+measurements with target-part projections per tier.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.analytical import (PathModel, doorbell_bandwidth_gbps,
+                                   far_memory_path, tpu_host_path)
+from repro.core.channels import CompletionMode, Direction
+from repro.rmem.node import AddressMap, MemoryNode
+from repro.rmem.verbs import CompletionQueue, MemoryRegion, QueuePair
+
+
+@runtime_checkable
+class TierBackend(Protocol):
+    """Cold-tier page store: fixed-size byte pages keyed by index."""
+
+    name: str
+    n_pages: int
+    page_bytes: int
+
+    def store(self, page: int, value: np.ndarray) -> None:
+        """Copy ``value`` (uint8, <= page_bytes) into cold storage."""
+        ...
+
+    def load(self, page: int) -> np.ndarray:
+        """Return the page's bytes (uint8 view/copy, page_bytes long)."""
+        ...
+
+    def path_model(self) -> PathModel:
+        """Analytical model of this tier's link (for projections)."""
+        ...
+
+    def stats(self) -> dict:
+        ...
+
+    def close(self) -> None:
+        ...
+
+
+class _AccountingMixin:
+    bytes_stored: int = 0
+    bytes_loaded: int = 0
+    store_ops: int = 0
+    load_ops: int = 0
+    seconds_busy: float = 0.0
+
+    def _account(self, nbytes: int, dt: float, is_store: bool) -> None:
+        if is_store:
+            self.bytes_stored += nbytes
+            self.store_ops += 1
+        else:
+            self.bytes_loaded += nbytes
+            self.load_ops += 1
+        self.seconds_busy += dt
+
+    def projected_seconds(self, nbytes: int, batch: int = 1,
+                          direction: Direction = Direction.C2H) -> float:
+        """Time on the modeled target link (vs the measured container)."""
+        bw = doorbell_bandwidth_gbps(self.path_model(), nbytes, batch,
+                                     direction=direction)
+        return nbytes / (bw * 1e9)
+
+    def _base_stats(self) -> dict:
+        return {"tier": self.name,
+                "bytes_stored": self.bytes_stored,
+                "bytes_loaded": self.bytes_loaded,
+                "store_ops": self.store_ops,
+                "load_ops": self.load_ops,
+                "seconds_busy": self.seconds_busy}
+
+
+class LocalHostBackend(_AccountingMixin):
+    """Cold pages in host DRAM — the seed ``KVPager`` backing store."""
+
+    name = "local-host"
+
+    def __init__(self, n_pages: int, page_bytes: int):
+        if n_pages < 1 or page_bytes < 1:
+            raise ValueError((n_pages, page_bytes))
+        self.n_pages = n_pages
+        self.page_bytes = page_bytes
+        self.mem = np.zeros((n_pages, page_bytes), np.uint8)
+
+    def _check(self, page: int, nbytes: int) -> None:
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+        if nbytes > self.page_bytes:
+            raise ValueError(f"{nbytes} B > page size {self.page_bytes}")
+
+    def store(self, page: int, value: np.ndarray) -> None:
+        flat = np.ascontiguousarray(value).reshape(-1).view(np.uint8)
+        self._check(page, flat.size)
+        t0 = time.perf_counter()
+        self.mem[page, :flat.size] = flat
+        self._account(flat.size, time.perf_counter() - t0, is_store=True)
+
+    def load(self, page: int) -> np.ndarray:
+        self._check(page, 0)
+        t0 = time.perf_counter()
+        out = self.mem[page].copy()
+        self._account(out.size, time.perf_counter() - t0, is_store=False)
+        return out
+
+    def path_model(self) -> PathModel:
+        return tpu_host_path()
+
+    def stats(self) -> dict:
+        return self._base_stats()
+
+    def close(self) -> None:
+        pass
+
+
+class RemoteBackend(_AccountingMixin):
+    """Cold pages on far-memory nodes via one-sided verbs.
+
+    The page address space ``[0, n_pages * page_bytes)`` is striped across
+    the given nodes by an ``AddressMap`` (nodes are created if omitted).  A
+    single staging ``MemoryRegion`` (one slot per page) feeds the QP, so a
+    re-store to the same page before its doorbell fires is plain write
+    combining, never a torn buffer.
+    """
+
+    name = "remote"
+
+    def __init__(self, n_pages: int, page_bytes: int,
+                 nodes: Optional[Sequence[MemoryNode]] = None,
+                 n_nodes: int = 1, doorbell_batch: int = 1,
+                 mode: CompletionMode = CompletionMode.POLLED):
+        if n_pages < 1 or page_bytes < 1:
+            raise ValueError((n_pages, page_bytes))
+        self.n_pages = n_pages
+        self.page_bytes = page_bytes
+        total = n_pages * page_bytes
+        self._own_nodes = nodes is None
+        if nodes is None:
+            per = -(-total // max(n_nodes, 1)) + 4096
+            nodes = [MemoryNode(f"memnode{i}", per) for i in range(n_nodes)]
+        self.amap = AddressMap.striped(list(nodes), total,
+                                       align=min(page_bytes, 4096))
+        self.cq = CompletionQueue(mode)
+        self.qp = QueuePair(self.amap, self.cq, doorbell_batch=doorbell_batch)
+        self._staging = np.zeros((n_pages, page_bytes), np.uint8)
+        self.mr = MemoryRegion(self._staging)
+        self.doorbell_batch = doorbell_batch
+
+    def _check(self, page: int, nbytes: int) -> None:
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+        if nbytes > self.page_bytes:
+            raise ValueError(f"{nbytes} B > page size {self.page_bytes}")
+
+    def store(self, page: int, value: np.ndarray) -> None:
+        flat = np.ascontiguousarray(value).reshape(-1).view(np.uint8)
+        self._check(page, flat.size)
+        t0 = time.perf_counter()
+        self._staging[page, :flat.size] = flat
+        self.qp.post_write(self.mr, page * self.page_bytes,
+                           page * self.page_bytes, self.page_bytes)
+        # doorbell rings at batch depth; flush() is the explicit fence
+        self._account(flat.size, time.perf_counter() - t0, is_store=True)
+
+    def load(self, page: int) -> np.ndarray:
+        self._check(page, 0)
+        t0 = time.perf_counter()
+        self.qp.flush()            # writes posted before this read are fenced
+        self.qp.read(self.mr, page * self.page_bytes,
+                     page * self.page_bytes, self.page_bytes)
+        out = self._staging[page].copy()
+        self._account(out.size, time.perf_counter() - t0, is_store=False)
+        return out
+
+    def flush(self) -> None:
+        self.qp.flush()
+
+    def path_model(self) -> PathModel:
+        return far_memory_path()
+
+    def stats(self) -> dict:
+        s = self._base_stats()
+        s["qp"] = self.qp.stats()
+        s["nodes"] = [n.stats() for n in self.amap.nodes]
+        return s
+
+    def close(self) -> None:
+        try:
+            self.qp.flush()
+        finally:
+            if self._own_nodes:
+                for n in self.amap.nodes:
+                    n.close()
+
+
+def make_backend(kind: str, n_pages: int, page_bytes: int,
+                 **kw) -> TierBackend:
+    """Factory used by CLI flags (``--kv-backend local|remote``)."""
+    if kind in ("local", "local-host", "host"):
+        return LocalHostBackend(n_pages, page_bytes)
+    if kind == "remote":
+        return RemoteBackend(n_pages, page_bytes, **kw)
+    raise ValueError(f"unknown tier backend {kind!r}")

@@ -1,0 +1,210 @@
+"""Far-memory nodes and the address map that stripes them (DESIGN.md §4.2).
+
+``MemoryNode`` models one NIC-attached DRAM pool: a server thread owning a
+flat byte pool, executing one-sided WRs FIFO per doorbell — the DMA engine
+of an off-path SmartNIC (arXiv:2212.07868).  Every WR stages its payload
+through ``jax.device_put`` onto the node's jax device, so the cross-device
+hop (the ICI/RDMA-link analogue) is physically exercised, then bytes land
+in (or leave) the numpy pool, which stays byte-addressable for verbs.
+
+``AddressMap`` is the SimBricks-memswitch routing table: ordered
+``(vaddr_start, vaddr_end, node, phys_start)`` ranges; an access spanning a
+range boundary is split across nodes, exactly like the exemplar's
+``sw_mem_map`` striping one address space over several memory nodes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.rmem.verbs import OpCode, WorkRequest, _Doorbell
+
+
+class MemoryNode:
+    """One far-memory server: byte pool + WR-executing worker thread."""
+
+    def __init__(self, name: str, capacity_bytes: int, device=None):
+        if capacity_bytes <= 0:
+            raise ValueError(capacity_bytes)
+        self.name = name
+        self.capacity_bytes = capacity_bytes
+        self.device = device if device is not None else jax.devices()[0]
+        self.pool = np.zeros(capacity_bytes, np.uint8)
+        self._brk = 0                       # bump allocator watermark
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread = threading.Thread(target=self._serve, daemon=True,
+                                        name=f"rmem-{name}")
+        self._alive = True
+        self.bytes_in = 0                   # one-sided writes landed
+        self.bytes_out = 0                  # one-sided reads served
+        self.ops = 0
+        self._thread.start()
+
+    # -- allocation ------------------------------------------------------
+    def alloc(self, nbytes: int, align: int = 64) -> int:
+        """Bump-allocate a region; returns its physical address."""
+        if nbytes <= 0:
+            raise ValueError(nbytes)
+        addr = -(-self._brk // align) * align
+        if addr + nbytes > self.capacity_bytes:
+            raise MemoryError(f"{self.name}: {nbytes} B exceeds capacity "
+                              f"({self._brk}/{self.capacity_bytes} used)")
+        self._brk = addr + nbytes
+        return addr
+
+    @property
+    def bytes_free(self) -> int:
+        return self.capacity_bytes - self._brk
+
+    def reset(self) -> None:
+        """Release all allocations (bump allocator: watermark to zero).
+
+        Callers own the invariant that no live region remains — e.g. a
+        checkpoint node between retention epochs."""
+        self._brk = 0
+
+    # -- WR execution ----------------------------------------------------
+    def execute(self, wrs: Sequence[WorkRequest], bell: _Doorbell) -> None:
+        """Enqueue one routed doorbell batch for the server thread."""
+        if not self._alive:
+            raise RuntimeError(f"{self.name} is closed")
+        self._q.put((list(wrs), bell))
+
+    def _serve(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            wrs, bell = item
+            for wr in wrs:
+                err: Optional[Exception] = None
+                try:
+                    self._execute_one(wr)
+                except Exception as e:
+                    err = e
+                bell.wr_done(wr, err)
+
+    def _execute_one(self, wr: WorkRequest) -> None:
+        if wr.phys_addr < 0 or wr.phys_addr + wr.nbytes > self.capacity_bytes:
+            raise IndexError(f"{self.name}: phys [{wr.phys_addr}, "
+                             f"{wr.phys_addr + wr.nbytes}) out of pool")
+        self.ops += 1
+        if wr.opcode == OpCode.WRITE:
+            src = wr.mr.view(wr.local_offset, wr.nbytes)
+            staged = jax.device_put(src, self.device)   # the link hop
+            staged.block_until_ready()
+            self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes] = \
+                np.asarray(staged)
+            self.bytes_in += wr.nbytes
+        else:
+            staged = jax.device_put(
+                self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes], self.device)
+            staged.block_until_ready()
+            wr.mr.view(wr.local_offset, wr.nbytes)[:] = np.asarray(staged)
+            self.bytes_out += wr.nbytes
+
+    def stats(self) -> dict:
+        return {"name": self.name, "bytes_in": self.bytes_in,
+                "bytes_out": self.bytes_out, "ops": self.ops,
+                "allocated": self._brk, "capacity": self.capacity_bytes}
+
+    def close(self) -> None:
+        if self._alive:
+            self._alive = False
+            self._q.put(None)
+            self._thread.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+@dataclass(frozen=True)
+class MapEntry:
+    vaddr_start: int            # inclusive
+    vaddr_end: int              # exclusive
+    node: MemoryNode
+    phys_start: int
+
+
+class AddressMap:
+    """Ordered virtual->physical routing table over memory nodes."""
+
+    def __init__(self, entries: Sequence[MapEntry] = ()):
+        self.entries: List[MapEntry] = []
+        for e in entries:
+            self.add_range(e.vaddr_start, e.vaddr_end, e.node, e.phys_start)
+
+    def add_range(self, vaddr_start: int, vaddr_end: int, node: MemoryNode,
+                  phys_start: int = 0) -> MapEntry:
+        if vaddr_end <= vaddr_start or vaddr_start < 0:
+            raise ValueError((vaddr_start, vaddr_end))
+        if phys_start + (vaddr_end - vaddr_start) > node.capacity_bytes:
+            raise ValueError(f"range exceeds {node.name} capacity")
+        for e in self.entries:
+            if vaddr_start < e.vaddr_end and e.vaddr_start < vaddr_end:
+                raise ValueError(f"overlaps existing range "
+                                 f"[{e.vaddr_start}, {e.vaddr_end})")
+        entry = MapEntry(vaddr_start, vaddr_end, node, phys_start)
+        self.entries.append(entry)
+        self.entries.sort(key=lambda e: e.vaddr_start)
+        return entry
+
+    @property
+    def nodes(self) -> List[MemoryNode]:
+        seen, out = set(), []
+        for e in self.entries:
+            if id(e.node) not in seen:
+                seen.add(id(e.node))
+                out.append(e.node)
+        return out
+
+    def resolve(self, addr: int, nbytes: int) \
+            -> List[Tuple[MemoryNode, int, int, int]]:
+        """Route [addr, addr+nbytes) -> [(node, phys, nbytes, local_off)].
+
+        Splits at range boundaries; raises on unmapped holes.
+        """
+        if nbytes <= 0:
+            raise ValueError(nbytes)
+        out: List[Tuple[MemoryNode, int, int, int]] = []
+        pos = addr
+        end = addr + nbytes
+        for e in self.entries:
+            if e.vaddr_end <= pos:
+                continue
+            if e.vaddr_start > pos:
+                break                       # hole before next range
+            n = min(end, e.vaddr_end) - pos
+            out.append((e.node, e.phys_start + (pos - e.vaddr_start), n,
+                        pos - addr))
+            pos += n
+            if pos >= end:
+                return out
+        raise ValueError(f"address [{pos}, {end}) unmapped")
+
+    @classmethod
+    def striped(cls, nodes: Sequence[MemoryNode], total_bytes: int,
+                align: int = 64) -> "AddressMap":
+        """Carve ``total_bytes`` contiguously across ``nodes`` (equal-ish
+        extents, each bump-allocated on its node) — the memswitch layout."""
+        if not nodes:
+            raise ValueError("no nodes")
+        amap = cls()
+        per = -(-total_bytes // len(nodes))
+        vaddr = 0
+        for node in nodes:
+            n = min(per, total_bytes - vaddr)
+            if n <= 0:
+                break
+            phys = node.alloc(n, align=align)
+            amap.add_range(vaddr, vaddr + n, node, phys)
+            vaddr += n
+        return amap

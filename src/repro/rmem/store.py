@@ -1,0 +1,170 @@
+"""Two-level tiered page store: HBM hot slots over a pluggable cold tier.
+
+The generalization of the seed ``KVPager`` (DESIGN.md §3.3 -> §4.3): hot
+pages live in device (HBM) slots, cold pages live wherever the
+``TierBackend`` puts them — host DRAM (``LocalHostBackend``) or far-memory
+nodes behind verbs (``RemoteBackend``).  The HBM<->host staging leg still
+flows through the NMA ``MemoryEngine`` (H2C/C2H), so with a remote backend
+a page miss is the paper's full two-hop path: node --verbs--> host staging
+--H2C--> HBM.
+
+Residency algorithm is unchanged from ``KVPager``: LRU eviction over
+``n_hot_slots`` device slots, batch-staged H2C fills, ``h2c_bytes`` /
+``c2h_bytes`` accounting; cold-tier traffic is accounted by the backend.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import MemoryEngine
+from repro.rmem.backend import LocalHostBackend, TierBackend
+
+
+class TieredStore:
+    """Page-granular residency manager parameterized by cold-tier backend."""
+
+    def __init__(self, n_pages: int, page_shape: Tuple[int, ...],
+                 dtype="bfloat16", n_hot_slots: int = 8,
+                 engine: Optional[MemoryEngine] = None,
+                 backend: Optional[TierBackend] = None):
+        if n_hot_slots < 1:
+            raise ValueError(n_hot_slots)
+        self.n_pages = n_pages
+        self.page_shape = tuple(page_shape)
+        self.dtype = jnp.dtype(dtype)
+        self._np_dtype = np.dtype(self.dtype.name)
+        self.n_hot_slots = min(n_hot_slots, n_pages)
+        self.engine = engine or MemoryEngine(n_channels=2)
+        self.page_bytes = int(np.prod(self.page_shape)) * self.dtype.itemsize
+        self.backend: TierBackend = backend if backend is not None else \
+            LocalHostBackend(n_pages, self.page_bytes)
+        if self.backend.n_pages < n_pages or \
+                self.backend.page_bytes < self.page_bytes:
+            raise ValueError("backend geometry too small for store")
+        # device (hot) slots
+        self.slots: List[Optional[jax.Array]] = [None] * self.n_hot_slots
+        self.slot_of_page: Dict[int, int] = {}
+        self.page_in_slot: List[Optional[int]] = [None] * self.n_hot_slots
+        self._clock = 0
+        self._last_use = [0] * self.n_hot_slots
+        self.h2c_bytes = 0
+        self.c2h_bytes = 0
+
+    # -- cold-tier typed views ------------------------------------------
+    def _to_typed(self, raw: np.ndarray) -> np.ndarray:
+        return raw[:self.page_bytes].view(self._np_dtype) \
+                                    .reshape(self.page_shape)
+
+    def read_page(self, page: int) -> np.ndarray:
+        """Cold-tier view of a page (host copy, typed).  If the page is
+        device-resident its slot is authoritative — drain it first."""
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+        if page in self.slot_of_page:
+            s = self.slot_of_page[page]
+            host = np.asarray(self.engine.read(self.slots[s]).wait())
+            self.c2h_bytes += self.page_bytes
+            return host
+        return self._to_typed(self.backend.load(page))
+
+    def write_page(self, page: int, value) -> None:
+        """Update a page (cold tier + device copy if resident)."""
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+        arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
+        self.backend.store(page, arr.reshape(-1).view(np.uint8))
+        if page in self.slot_of_page:
+            s = self.slot_of_page[page]
+            self.slots[s] = self.engine.write(arr).wait()
+            self.h2c_bytes += self.page_bytes
+
+    # -- residency -------------------------------------------------------
+    def _evict(self) -> int:
+        s = min(range(self.n_hot_slots), key=lambda i: self._last_use[i])
+        old = self.page_in_slot[s]
+        if old is not None:
+            host = np.asarray(self.engine.read(self.slots[s]).wait())
+            self.c2h_bytes += self.page_bytes
+            self.backend.store(old, host.reshape(-1).view(np.uint8))
+            del self.slot_of_page[old]
+        self.page_in_slot[s] = None
+        return s
+
+    def ensure(self, pages) -> Dict[int, jax.Array]:
+        """Make pages resident; returns {page: device_array}."""
+        if len(set(pages)) > self.n_hot_slots:
+            raise ValueError(f"requested {len(set(pages))} pages > "
+                             f"{self.n_hot_slots} hot slots")
+        missing = [p for p in pages if p not in self.slot_of_page]
+        # stage all H2C transfers first (multi-channel overlap), then place;
+        # bumping _last_use at assignment keeps one batch from re-evicting a
+        # slot whose H2C is still in flight
+        pending = []
+        for p in missing:
+            if p < 0 or p >= self.n_pages:
+                raise IndexError(p)
+            s = self._evict()
+            self._clock += 1
+            self._last_use[s] = self._clock
+            typed = self._to_typed(self.backend.load(p))
+            pending.append((p, s, self.engine.write(typed)))
+            self.page_in_slot[s] = p
+            self.slot_of_page[p] = s
+        for p, s, tr in pending:
+            self.slots[s] = tr.wait()
+            self.h2c_bytes += self.page_bytes
+        out = {}
+        for p in pages:
+            s = self.slot_of_page[p]
+            self._clock += 1
+            self._last_use[s] = self._clock
+            out[p] = self.slots[s]
+        return out
+
+    def release(self, page: int, writeback: bool = False) -> None:
+        """Drop a page's residency (optionally draining it cold first)."""
+        if page not in self.slot_of_page:
+            return
+        s = self.slot_of_page.pop(page)
+        if writeback:
+            host = np.asarray(self.engine.read(self.slots[s]).wait())
+            self.c2h_bytes += self.page_bytes
+            self.backend.store(page, host.reshape(-1).view(np.uint8))
+        self.page_in_slot[s] = None
+        self.slots[s] = None
+        self._last_use[s] = 0
+
+    @property
+    def resident_pages(self):
+        return sorted(self.slot_of_page)
+
+    # -- accounting ------------------------------------------------------
+    def stats(self) -> dict:
+        cold = self.backend.stats()
+        moved = cold.get("bytes_stored", 0) + cold.get("bytes_loaded", 0)
+        batch = getattr(self.backend, "doorbell_batch", 1)
+        # stores batch up to the doorbell depth; loads are synchronous
+        # single-doorbell reads and never amortize their setup
+        projected = (
+            self.backend.projected_seconds(self.page_bytes, batch)
+            * cold.get("store_ops", 0)
+            + self.backend.projected_seconds(self.page_bytes, 1)
+            * cold.get("load_ops", 0))
+        return {"h2c_bytes": self.h2c_bytes, "c2h_bytes": self.c2h_bytes,
+                "page_bytes": self.page_bytes, "cold": cold,
+                "cold_bytes_moved": moved,
+                "cold_projected_seconds": projected}
+
+    def close(self) -> None:
+        self.backend.close()
+        self.engine.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,365 @@
+"""RDMA-style one-sided verbs onto far memory (DESIGN.md §4.1).
+
+The paper's third access design — an easy API over a separate link — is
+RDMA on the SoC SmartNIC; on a TPU pod the analogue is ICI device<->device
+transfer (validated by ``benchmarks/rdma_analogue.py``).  This module gives
+that path a real verbs surface:
+
+* ``MemoryRegion`` — registration of a host buffer (lkey, byte-addressable
+  view), the prerequisite for any one-sided op;
+* ``QueuePair`` — posts one-sided READ/WRITE work requests against a
+  ``MemoryNode`` (or an ``AddressMap`` spanning several nodes), with
+  *doorbell batching*: posts accumulate until ``ring_doorbell()`` (or the
+  configured batch depth) and only the last WR of a doorbell is signaled,
+  so N batched writes cost one completion and one setup latency;
+* ``CompletionQueue`` — POLLED (caller polls/waits) or INTERRUPT (callback
+  from the node's completion path) via the shared ``CompletionMode``.
+
+Under the hood every executed WR stages its payload through
+``jax.device_put`` onto the node's device — the cross-device hop — before
+bytes land in the node's pool, so measured timings include the transfer
+the analytical ICI model projects.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.channels import CompletionMode
+
+
+class OpCode(enum.Enum):
+    READ = "read"
+    WRITE = "write"
+
+
+class WCStatus(enum.Enum):
+    SUCCESS = "success"
+    ERROR = "error"
+
+
+class MemoryRegion:
+    """Registered host buffer: the lkey-bearing byte view verbs operate on."""
+
+    _lkeys = itertools.count(1)
+
+    def __init__(self, buf: np.ndarray):
+        if not isinstance(buf, np.ndarray):
+            raise TypeError("MemoryRegion requires a host numpy buffer")
+        self.buf = buf
+        self._view = buf.reshape(-1).view(np.uint8)
+        self.lkey = next(self._lkeys)
+
+    @property
+    def nbytes(self) -> int:
+        return self._view.size
+
+    def view(self, offset: int, nbytes: int) -> np.ndarray:
+        if offset < 0 or nbytes < 0 or offset + nbytes > self.nbytes:
+            raise ValueError(f"MR access out of bounds: "
+                             f"[{offset}, {offset + nbytes}) vs {self.nbytes}")
+        return self._view[offset:offset + nbytes]
+
+
+@dataclass
+class WorkCompletion:
+    wr_id: int
+    opcode: OpCode
+    status: WCStatus
+    nbytes: int                 # bytes of the signaled WR itself
+    batch_bytes: int            # bytes of the whole doorbell it closed
+    batch_wrs: int              # WRs in that doorbell
+    t_post: float
+    t_done: float
+    error: Optional[Exception] = None
+
+    @property
+    def seconds(self) -> float:
+        return max(self.t_done - self.t_post, 1e-9)
+
+    @property
+    def gbps(self) -> float:
+        return self.batch_bytes / self.seconds / 1e9
+
+
+class CompletionQueue:
+    """Completion ring; POLLED callers poll/wait, INTERRUPT fires a callback."""
+
+    def __init__(self, mode: CompletionMode = CompletionMode.POLLED,
+                 on_completion: Optional[Callable[[WorkCompletion], None]] = None):
+        self.mode = mode
+        self.on_completion = on_completion
+        self._ring: deque = deque()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self.n_completions = 0
+
+    def push(self, wc: WorkCompletion) -> None:
+        with self._cv:
+            self._ring.append(wc)
+            self.n_completions += 1
+            self._cv.notify_all()
+        if self.mode == CompletionMode.INTERRUPT and \
+                self.on_completion is not None:
+            self.on_completion(wc)
+
+    def poll(self, max_entries: int = 16) -> List[WorkCompletion]:
+        out = []
+        with self._lock:
+            while self._ring and len(out) < max_entries:
+                out.append(self._ring.popleft())
+        return out
+
+    def wait(self, n: int = 1, timeout: float = 30.0) -> List[WorkCompletion]:
+        """Block until ``n`` completions are available, then pop them."""
+        deadline = time.monotonic() + timeout
+        out: List[WorkCompletion] = []
+        with self._cv:
+            while len(out) < n:
+                while self._ring and len(out) < n:
+                    out.append(self._ring.popleft())
+                if len(out) >= n:
+                    break
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._cv.wait(left):
+                    raise TimeoutError(
+                        f"CQ: {len(out)}/{n} completions before timeout")
+        return out
+
+    def wait_wr(self, wr_id: int, timeout: float = 30.0) -> WorkCompletion:
+        """Block until the completion for ``wr_id`` arrives; pops others too
+        (they stay drained — the caller asked for a specific fence)."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while True:
+                while self._ring:
+                    wc = self._ring.popleft()
+                    if wc.wr_id == wr_id:
+                        return wc
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._cv.wait(left):
+                    raise TimeoutError(f"CQ: wr {wr_id} incomplete")
+
+
+@dataclass
+class WorkRequest:
+    wr_id: int
+    opcode: OpCode
+    mr: MemoryRegion
+    local_offset: int
+    remote_addr: int            # virtual address (AddressMap space)
+    nbytes: int
+    signaled: bool
+    t_post: float = 0.0
+    # filled by routing: physical placement on one node
+    phys_addr: int = 0
+
+
+class _Doorbell:
+    """One rung doorbell: a batch of routed WRs sharing a completion fence.
+
+    The signaled WR's completion is deferred until every WR of the batch
+    (possibly split across nodes by the AddressMap) has executed — the
+    'only the last WR is signaled' RDMA idiom.
+    """
+
+    def __init__(self, wrs: Sequence[WorkRequest], cq: CompletionQueue,
+                 on_drained: Optional[Callable[["_Doorbell"], None]] = None):
+        self.cq = cq
+        self.on_drained = on_drained
+        self.remaining = len(wrs)
+        self.total_bytes = sum(w.nbytes for w in wrs)
+        self.n_wrs = len(wrs)
+        self.signaled = [w for w in wrs if w.signaled]
+        self.error: Optional[Exception] = None
+        self._lock = threading.Lock()
+
+    def wr_done(self, wr: WorkRequest, error: Optional[Exception]) -> None:
+        with self._lock:
+            if error is not None and self.error is None:
+                self.error = error
+            self.remaining -= 1
+            finished = self.remaining == 0
+        if not finished:
+            return
+        t_done = time.perf_counter()
+        for w in self.signaled:
+            status = WCStatus.SUCCESS if self.error is None else WCStatus.ERROR
+            self.cq.push(WorkCompletion(
+                wr_id=w.wr_id, opcode=w.opcode, status=status,
+                nbytes=w.nbytes, batch_bytes=self.total_bytes,
+                batch_wrs=self.n_wrs, t_post=w.t_post, t_done=t_done,
+                error=self.error))
+        if self.on_drained is not None:
+            self.on_drained(self)
+
+
+class QueuePair:
+    """Send queue of one-sided verbs against a node or an address map.
+
+    ``target`` is a ``MemoryNode`` (single-node rmem) or an ``AddressMap``
+    (SimBricks-memswitch-style multi-node far memory).  Work requests
+    accumulate until ``ring_doorbell()``; posting the ``doorbell_batch``-th
+    WR rings automatically.  Only the final WR of each doorbell is signaled
+    unless the caller forces ``signaled=True``.
+    """
+
+    _qpns = itertools.count(1)
+
+    def __init__(self, target, cq: Optional[CompletionQueue] = None,
+                 doorbell_batch: int = 1,
+                 mode: CompletionMode = CompletionMode.POLLED):
+        if doorbell_batch < 1:
+            raise ValueError(
+                f"doorbell_batch must be >= 1, got {doorbell_batch}")
+        self.target = target
+        self.cq = cq if cq is not None else CompletionQueue(mode)
+        self.doorbell_batch = doorbell_batch
+        self.qpn = next(self._qpns)
+        self._pending: List[WorkRequest] = []
+        self._wr_ids = itertools.count(1)
+        self._inflight = 0                  # doorbells rung, not yet drained
+        self._inflight_cv = threading.Condition()
+        self._async_error: Optional[Exception] = None
+        # accounting (per-tier bandwidth/latency bookkeeping)
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.doorbells = 0
+        self.wrs_posted = 0
+
+    # -- posting ---------------------------------------------------------
+    def _post(self, opcode: OpCode, mr: MemoryRegion, local_offset: int,
+              remote_addr: int, nbytes: int, wr_id: Optional[int],
+              signaled: Optional[bool]) -> int:
+        mr.view(local_offset, nbytes)  # bounds-check at post time
+        wr = WorkRequest(
+            wr_id=wr_id if wr_id is not None else next(self._wr_ids),
+            opcode=opcode, mr=mr, local_offset=local_offset,
+            remote_addr=remote_addr, nbytes=nbytes,
+            signaled=bool(signaled) if signaled is not None else False)
+        self._pending.append(wr)
+        self.wrs_posted += 1
+        if opcode == OpCode.WRITE:
+            self.bytes_written += nbytes
+        else:
+            self.bytes_read += nbytes
+        if len(self._pending) >= self.doorbell_batch:
+            self.ring_doorbell()
+        return wr.wr_id
+
+    def post_write(self, mr: MemoryRegion, local_offset: int,
+                   remote_addr: int, nbytes: int,
+                   wr_id: Optional[int] = None,
+                   signaled: Optional[bool] = None) -> int:
+        return self._post(OpCode.WRITE, mr, local_offset, remote_addr,
+                          nbytes, wr_id, signaled)
+
+    def post_read(self, mr: MemoryRegion, local_offset: int,
+                  remote_addr: int, nbytes: int,
+                  wr_id: Optional[int] = None,
+                  signaled: Optional[bool] = None) -> int:
+        return self._post(OpCode.READ, mr, local_offset, remote_addr,
+                          nbytes, wr_id, signaled)
+
+    # -- doorbell --------------------------------------------------------
+    def _route(self, wrs: Sequence[WorkRequest]) \
+            -> List[Tuple["object", List[WorkRequest]]]:
+        """Resolve virtual addresses; split WRs spanning node boundaries."""
+        from repro.rmem.node import AddressMap, MemoryNode
+        routed: List[Tuple[object, WorkRequest]] = []
+        for wr in wrs:
+            if isinstance(self.target, MemoryNode):
+                wr.phys_addr = wr.remote_addr
+                routed.append((self.target, wr))
+                continue
+            amap: AddressMap = self.target
+            for node, phys, nbytes, local_off in \
+                    amap.resolve(wr.remote_addr, wr.nbytes):
+                part = WorkRequest(
+                    wr_id=wr.wr_id, opcode=wr.opcode, mr=wr.mr,
+                    local_offset=wr.local_offset + local_off,
+                    remote_addr=wr.remote_addr + local_off, nbytes=nbytes,
+                    signaled=wr.signaled and
+                    (local_off + nbytes == wr.nbytes),
+                    t_post=wr.t_post, phys_addr=phys)
+                routed.append((node, part))
+        by_node: Dict[int, Tuple[object, List[WorkRequest]]] = {}
+        for node, wr in routed:
+            by_node.setdefault(id(node), (node, []))[1].append(wr)
+        return list(by_node.values())
+
+    def ring_doorbell(self) -> None:
+        if not self._pending:
+            return
+        wrs, self._pending = self._pending, []
+        if not any(w.signaled for w in wrs):
+            wrs[-1].signaled = True    # last-WR-signaled batching
+        now = time.perf_counter()
+        for w in wrs:
+            w.t_post = now
+        per_node = self._route(wrs)
+        flat = [w for _, ws in per_node for w in ws]
+        with self._inflight_cv:
+            self._inflight += 1
+        bell = _Doorbell(flat, self.cq, on_drained=self._bell_drained)
+        self.doorbells += 1
+        for node, node_wrs in per_node:
+            node.execute(node_wrs, bell)
+
+    def _bell_drained(self, bell: _Doorbell) -> None:
+        with self._inflight_cv:
+            if bell.error is not None and self._async_error is None:
+                self._async_error = bell.error
+            self._inflight -= 1
+            self._inflight_cv.notify_all()
+
+    # -- blocking convenience wrappers ----------------------------------
+    def write(self, mr: MemoryRegion, local_offset: int, remote_addr: int,
+              nbytes: int, timeout: float = 30.0) -> WorkCompletion:
+        """Post + doorbell + wait: one synchronous one-sided write."""
+        wr = self.post_write(mr, local_offset, remote_addr, nbytes,
+                             signaled=True)
+        self.ring_doorbell()
+        wc = self.cq.wait_wr(wr, timeout)
+        if wc.status != WCStatus.SUCCESS:
+            raise wc.error or IOError(f"write wr {wr} failed")
+        return wc
+
+    def read(self, mr: MemoryRegion, local_offset: int, remote_addr: int,
+             nbytes: int, timeout: float = 30.0) -> WorkCompletion:
+        """Post + doorbell + wait: one synchronous one-sided read."""
+        wr = self.post_read(mr, local_offset, remote_addr, nbytes,
+                            signaled=True)
+        self.ring_doorbell()
+        wc = self.cq.wait_wr(wr, timeout)
+        if wc.status != WCStatus.SUCCESS:
+            raise wc.error or IOError(f"read wr {wr} failed")
+        return wc
+
+    def flush(self, timeout: float = 30.0) -> None:
+        """Ring any pending doorbell and fence on ALL in-flight ones."""
+        self.ring_doorbell()
+        deadline = time.monotonic() + timeout
+        with self._inflight_cv:
+            while self._inflight > 0:
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._inflight_cv.wait(left):
+                    raise TimeoutError(
+                        f"flush: {self._inflight} doorbells in flight")
+            if self._async_error is not None:
+                e, self._async_error = self._async_error, None
+                raise e
+
+    def stats(self) -> dict:
+        return {"bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read,
+                "wrs_posted": self.wrs_posted,
+                "doorbells": self.doorbells,
+                "completions": self.cq.n_completions}

@@ -85,7 +85,90 @@ class TestChannels:
             assert pool.channels[0].bytes_moved == x.nbytes
 
 
+class TestChannelErrorPath:
+    def test_failed_chunk_completes_multichunk_transfer(self):
+        """Regression: a failed chunk must count toward _done, set the
+        event, and fire on_complete — INTERRUPT-mode waiters used to leak
+        when one chunk of a multi-chunk transfer raised."""
+        import threading
+        import time as _time
+        from repro.core.channels import Channel, Transfer
+        done = threading.Event()
+        tr = Transfer(direction=Direction.H2C, n_chunks=2,
+                      t_submit=_time.perf_counter(), device=jax.devices()[0],
+                      on_complete=lambda t: done.set())
+        ch = Channel("errtest")
+        try:
+            ch.submit((tr, 0, np.ones(16, np.float32)))
+            ch.submit((tr, 1, object()))       # device_put cannot handle it
+            assert done.wait(10), "on_complete never fired"
+            assert tr.poll()
+            with pytest.raises(Exception):
+                tr.result()
+        finally:
+            ch.close()
+
+    def test_failed_chunk_wakes_polled_waiter(self):
+        from repro.core.channels import Channel, Transfer
+        import time as _time
+        tr = Transfer(direction=Direction.H2C, n_chunks=1,
+                      t_submit=_time.perf_counter(), device=jax.devices()[0])
+        ch = Channel("errtest2")
+        try:
+            ch.submit((tr, 0, object()))
+            with pytest.raises(Exception):
+                tr.wait(timeout=10)
+        finally:
+            ch.close()
+
+
+class _RecordingPool:
+    """Stand-in ChannelPool: records submissions, completes instantly."""
+
+    def __init__(self):
+        self.submitted = []
+
+    def submit(self, payload, direction, mode=None, on_complete=None):
+        self.submitted.append(payload)
+
+        class _T:
+            def result(self):
+                return payload
+        t = _T()
+        if on_complete is not None:
+            on_complete(t)
+        return t
+
+    def close(self):
+        pass
+
+
 class TestQueueEngine:
+    def test_weighted_round_robin_proportions(self):
+        """One _drain_once round takes up to ``weight`` items per queue."""
+        pool = _RecordingPool()
+        qe = QueueEngine(pool=pool)
+        qe._stop.set()                 # freeze the scheduler thread
+        qe._thread.join(timeout=5)
+        qe.create_queue("heavy", weight=3)
+        qe.create_queue("light", weight=1)
+        for i in range(9):
+            qe.submit("heavy", ("heavy", i), Direction.H2C)
+        for i in range(3):
+            qe.submit("light", ("light", i), Direction.H2C)
+        qe._drain_once()
+        first = [p[0] for p in pool.submitted]
+        assert first.count("heavy") == 3 and first.count("light") == 1
+        # three rounds drain everything at exactly 3:1
+        qe._drain_once()
+        qe._drain_once()
+        names = [p[0] for p in pool.submitted]
+        assert names.count("heavy") == 9 and names.count("light") == 3
+        # per-round interleave preserved the weights
+        for r in range(3):
+            rnd = names[4 * r:4 * (r + 1)]
+            assert rnd.count("heavy") == 3 and rnd.count("light") == 1
+
     def test_multi_queue_completion(self):
         with QueueEngine(n_channels=2) as qe:
             qe.create_queue("data", weight=2)

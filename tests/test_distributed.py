@@ -83,7 +83,7 @@ import json, dataclasses
 import jax
 from repro.configs import get_config, reduce_for_smoke, SHAPES
 from repro.launch import dryrun as D
-from repro.launch.hlo import total_collective_bytes
+from repro.launch.hlo import cost_analysis_dict, total_collective_bytes
 
 cfg = reduce_for_smoke(get_config("llama3-8b"))
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
@@ -95,7 +95,7 @@ ma = compiled.memory_analysis()
 print(json.dumps({
     "collective_bytes": total,
     "categories": sorted(per),
-    "flops": compiled.cost_analysis().get("flops", 0.0),
+    "flops": cost_analysis_dict(compiled).get("flops", 0.0),
     "arg_bytes": ma.argument_size_in_bytes,
 }))
 """

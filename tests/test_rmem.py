@@ -1,0 +1,334 @@
+"""rmem subsystem tests: verbs, memory nodes, address map, tiered store,
+serve integration, and far checkpoints (ISSUE 1 acceptance criteria)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.analytical import (bandwidth_gbps, doorbell_bandwidth_gbps,
+                                   far_memory_path)
+from repro.core.channels import CompletionMode, Direction
+from repro.rmem import (AddressMap, CompletionQueue, LocalHostBackend,
+                        MemoryNode, MemoryRegion, QueuePair, RemoteBackend,
+                        TieredStore, WCStatus, make_backend)
+
+
+class TestVerbs:
+    def test_one_sided_write_read_roundtrip_bit_exact(self):
+        with MemoryNode("n0", 1 << 20) as node:
+            src = np.random.default_rng(0).integers(
+                0, 256, 4096, dtype=np.uint8)
+            addr = node.alloc(4096)
+            qp = QueuePair(node)
+            wc = qp.write(MemoryRegion(src), 0, addr, 4096)
+            assert wc.status == WCStatus.SUCCESS
+            back = np.zeros(4096, np.uint8)
+            qp.read(MemoryRegion(back), 0, addr, 4096)
+            np.testing.assert_array_equal(back, src)
+            assert node.bytes_in == 4096 and node.bytes_out == 4096
+
+    def test_doorbell_batching_fewer_completions(self):
+        n = 8
+        with MemoryNode("n1", 1 << 20) as node:
+            mr = MemoryRegion(np.ones(n * 512, np.uint8))
+            qp = QueuePair(node, doorbell_batch=n)
+            base = node.alloc(n * 512)
+            for i in range(n):
+                qp.post_write(mr, i * 512, base + i * 512, 512)
+            qp.flush()
+            assert qp.wrs_posted == n
+            assert qp.cq.n_completions < n
+            assert qp.cq.n_completions == 1
+            np.testing.assert_array_equal(
+                node.pool[base:base + n * 512], np.ones(n * 512, np.uint8))
+
+    def test_batched_completion_carries_batch_totals(self):
+        with MemoryNode("n2", 1 << 20) as node:
+            mr = MemoryRegion(np.ones(4 * 256, np.uint8))
+            qp = QueuePair(node, doorbell_batch=4)
+            base = node.alloc(4 * 256)
+            for i in range(4):
+                qp.post_write(mr, i * 256, base + i * 256, 256)
+            wc = qp.cq.wait(1)[0]
+            assert wc.batch_wrs == 4
+            assert wc.batch_bytes == 4 * 256
+
+    def test_interrupt_mode_fires_callback(self):
+        import threading
+        fired = threading.Event()
+        cq = CompletionQueue(CompletionMode.INTERRUPT,
+                             on_completion=lambda wc: fired.set())
+        with MemoryNode("n3", 1 << 16) as node:
+            qp = QueuePair(node, cq=cq)
+            qp.write(MemoryRegion(np.ones(64, np.uint8)), 0,
+                     node.alloc(64), 64)
+            assert fired.wait(10)
+
+    def test_mr_bounds_checked_at_post(self):
+        with MemoryNode("n4", 1 << 16) as node:
+            qp = QueuePair(node)
+            mr = MemoryRegion(np.ones(64, np.uint8))
+            with pytest.raises(ValueError, match="out of bounds"):
+                qp.post_write(mr, 32, 0, 64)
+
+    def test_out_of_pool_write_surfaces_error(self):
+        with MemoryNode("n5", 1024) as node:
+            qp = QueuePair(node, doorbell_batch=4)
+            qp.post_write(MemoryRegion(np.ones(512, np.uint8)), 0, 900, 512)
+            with pytest.raises(IndexError, match="out of pool"):
+                qp.flush()
+
+    def test_qp_stats_account_traffic(self):
+        with MemoryNode("n6", 1 << 16) as node:
+            qp = QueuePair(node)
+            addr = node.alloc(256)
+            qp.write(MemoryRegion(np.ones(256, np.uint8)), 0, addr, 256)
+            buf = np.zeros(256, np.uint8)
+            qp.read(MemoryRegion(buf), 0, addr, 256)
+            s = qp.stats()
+            assert s["bytes_written"] == 256 and s["bytes_read"] == 256
+            assert s["doorbells"] == 2
+
+
+class TestMemoryNode:
+    def test_alloc_bump_and_exhaustion(self):
+        with MemoryNode("a0", 1024) as node:
+            a = node.alloc(100)
+            b = node.alloc(100)
+            assert b >= a + 100 and b % 64 == 0
+            with pytest.raises(MemoryError):
+                node.alloc(2048)
+
+    def test_cross_device_staging_counts_ops(self):
+        with MemoryNode("a1", 1 << 16) as node:
+            qp = QueuePair(node)
+            qp.write(MemoryRegion(np.ones(128, np.uint8)), 0,
+                     node.alloc(128), 128)
+            assert node.ops == 1
+
+
+class TestAddressMap:
+    def test_multi_node_routing_splits_ranges(self):
+        n0, n1 = MemoryNode("m0", 1 << 16), MemoryNode("m1", 1 << 16)
+        try:
+            amap = AddressMap.striped([n0, n1], 1 << 16)   # 32 KB each
+            src = np.random.default_rng(1).integers(
+                0, 256, 40000, dtype=np.uint8)
+            qp = QueuePair(amap)
+            qp.write(MemoryRegion(src), 0, 0, 40000)       # spans both
+            assert n0.bytes_in == 32768
+            assert n1.bytes_in == 40000 - 32768
+            back = np.zeros(40000, np.uint8)
+            qp.read(MemoryRegion(back), 0, 0, 40000)
+            np.testing.assert_array_equal(back, src)
+        finally:
+            n0.close()
+            n1.close()
+
+    def test_resolve_routes_to_correct_node(self):
+        n0, n1 = MemoryNode("m2", 1 << 12), MemoryNode("m3", 1 << 12)
+        try:
+            amap = AddressMap()
+            amap.add_range(0, 1024, n0, phys_start=0)
+            amap.add_range(1024, 2048, n1, phys_start=512)
+            (node, phys, nbytes, off), = amap.resolve(1500, 100)
+            assert node is n1 and phys == 512 + (1500 - 1024)
+            assert nbytes == 100 and off == 0
+        finally:
+            n0.close()
+            n1.close()
+
+    def test_unmapped_hole_rejected(self):
+        with MemoryNode("m4", 1 << 12) as node:
+            amap = AddressMap()
+            amap.add_range(0, 512, node)
+            with pytest.raises(ValueError, match="unmapped"):
+                amap.resolve(256, 512)
+
+    def test_overlapping_range_rejected(self):
+        with MemoryNode("m5", 1 << 12) as node:
+            amap = AddressMap()
+            amap.add_range(0, 512, node)
+            with pytest.raises(ValueError, match="overlap"):
+                amap.add_range(256, 768, node, phys_start=512)
+
+
+class TestBackends:
+    def test_local_backend_roundtrip_and_accounting(self):
+        be = LocalHostBackend(4, 64)
+        v = np.arange(64, dtype=np.uint8)
+        be.store(2, v)
+        np.testing.assert_array_equal(be.load(2), v)
+        s = be.stats()
+        assert s["bytes_stored"] == 64 and s["bytes_loaded"] == 64
+
+    def test_remote_backend_roundtrip_multi_node(self):
+        be = RemoteBackend(n_pages=8, page_bytes=128, n_nodes=2,
+                           doorbell_batch=4)
+        try:
+            rng = np.random.default_rng(2)
+            pages = {p: rng.integers(0, 256, 128, dtype=np.uint8)
+                     for p in range(8)}
+            for p, v in pages.items():
+                be.store(p, v)
+            for p, v in pages.items():
+                np.testing.assert_array_equal(be.load(p), v)
+            assert all(n.bytes_in > 0 for n in be.amap.nodes)
+        finally:
+            be.close()
+
+    def test_make_backend_factory(self):
+        assert isinstance(make_backend("local", 2, 32), LocalHostBackend)
+        be = make_backend("remote", 2, 32)
+        assert isinstance(be, RemoteBackend)
+        be.close()
+        with pytest.raises(ValueError):
+            make_backend("tape", 2, 32)
+
+    def test_projected_seconds_uses_path_model(self):
+        be = LocalHostBackend(2, 1 << 20)
+        assert be.projected_seconds(1 << 20) > 0
+
+
+class TestTieredStore:
+    def _fill(self, store, n):
+        for p in range(n):
+            store.write_page(p, np.full(store.page_shape, p, np.float32))
+
+    @pytest.mark.parametrize("kind", ["local", "remote"])
+    def test_eviction_preserves_data(self, kind):
+        be = make_backend(kind, 12, 4 * 8 * 4)
+        with TieredStore(12, (4, 8), dtype="float32", n_hot_slots=3,
+                         backend=be) as st:
+            self._fill(st, 12)
+            st.ensure([0, 1, 2])
+            st.ensure([3, 4, 5])          # evicts 0-2
+            st.ensure([6, 7])
+            res = st.ensure([0])          # back intact from the cold tier
+            assert float(np.asarray(res[0])[0, 0]) == 0.0
+            assert st.c2h_bytes > 0 and st.h2c_bytes > 0
+
+    def test_lru_evicts_least_recently_used(self):
+        with TieredStore(6, (2, 2), dtype="float32", n_hot_slots=3) as st:
+            self._fill(st, 6)
+            st.ensure([0, 1, 2])
+            st.ensure([0, 1])             # page 2 becomes LRU
+            st.ensure([3])                # must evict page 2
+            assert 2 not in st.resident_pages
+            assert {0, 1, 3} == set(st.resident_pages)
+
+    def test_byte_accounting_matches_traffic(self):
+        with TieredStore(4, (8,), dtype="float32", n_hot_slots=2) as st:
+            self._fill(st, 4)
+            st.ensure([0, 1])
+            st.ensure([2, 3])             # 2 evictions + 2 fills
+            assert st.h2c_bytes == 4 * st.page_bytes
+            assert st.c2h_bytes == 2 * st.page_bytes
+            cold = st.stats()["cold"]
+            # 4 write_page stores + 2 eviction writebacks + 4 fills loaded
+            assert cold["bytes_stored"] == 6 * st.page_bytes
+            assert cold["bytes_loaded"] == 4 * st.page_bytes
+
+    def test_oversubscription_rejected(self):
+        with TieredStore(8, (2, 2), n_hot_slots=2) as st:
+            with pytest.raises(ValueError):
+                st.ensure([0, 1, 2])
+
+    def test_release_frees_slot(self):
+        with TieredStore(4, (2,), dtype="float32", n_hot_slots=2) as st:
+            self._fill(st, 4)
+            st.ensure([0, 1])
+            st.release(0)
+            assert st.resident_pages == [1]
+            st.ensure([2])                # takes the freed slot, no eviction
+            assert set(st.resident_pages) == {1, 2}
+
+    def test_remote_store_reports_remote_tier_bytes(self):
+        be = RemoteBackend(n_pages=4, page_bytes=16, n_nodes=1)
+        with TieredStore(4, (4,), dtype="float32", n_hot_slots=2,
+                         backend=be) as st:
+            self._fill(st, 4)
+            st.ensure([0, 1])
+            stats = st.stats()
+            assert stats["cold"]["tier"] == "remote"
+            assert stats["cold_bytes_moved"] > 0
+            assert stats["cold_projected_seconds"] > 0
+
+
+class TestAnalyticalFarPath:
+    def test_doorbell_batching_amortizes_setup(self):
+        m = far_memory_path()
+        size = 1 << 16
+        bws = [doorbell_bandwidth_gbps(m, size, b) for b in (1, 4, 16)]
+        assert bws[0] < bws[1] < bws[2]
+        assert bws[2] <= m.link_gbps
+
+    def test_far_path_slower_than_local_dma_at_size(self):
+        """Paper Figs 19-20: RDMA path below the raw-DMA path ceiling."""
+        from repro.core.analytical import paper_pcie_ddr4
+        size = 4 << 20
+        far = bandwidth_gbps(far_memory_path(), size, 1, Direction.C2H)
+        dma = bandwidth_gbps(paper_pcie_ddr4(), size, 1, Direction.C2H)
+        assert far < dma
+
+
+class TestServeIntegration:
+    def _serve(self, extra):
+        from repro.launch.serve import main
+        return main(["--smoke", "--requests", "2", "--max-new", "4",
+                     "--slots", "2"] + extra)
+
+    def test_kv_paging_remote_smoke_and_parity(self):
+        base = self._serve([])
+        local = self._serve(["--kv-paging"])
+        remote = self._serve(["--kv-paging", "--kv-backend", "remote"])
+        # paging must not change served tokens, on either backend
+        assert base["outputs"] == local["outputs"] == remote["outputs"]
+        assert local["kv"]["cold"]["tier"] == "local-host"
+        assert remote["kv"]["cold"]["tier"] == "remote"
+        assert remote["kv"]["cold"]["bytes_stored"] > 0
+        assert remote["kv"]["h2c_bytes"] > 0
+
+
+class TestFarCheckpoint:
+    def test_far_checkpoint_roundtrip(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones((4,), jnp.bfloat16),
+                "step": jnp.asarray(7, jnp.int32)}
+        with MemoryNode("ckpt", 1 << 20) as node:
+            cm = CheckpointManager(str(tmp_path))
+            man = cm.save_far(7, tree, node)
+            assert man["bytes"] > 0 and man["qp"]["doorbells"] >= 1
+            step, back = cm.restore_far(tree, man, node)
+            assert step == 7
+            for k in tree:
+                np.testing.assert_array_equal(np.asarray(back[k]),
+                                              np.asarray(tree[k]))
+
+    def test_periodic_far_checkpoints_reuse_addresses(self, tmp_path):
+        """Passing the previous manifest as ``reuse`` must overwrite in
+        place instead of bump-allocating the node to exhaustion."""
+        from repro.checkpoint.manager import CheckpointManager
+        tree = {"w": jnp.zeros((16, 16), jnp.float32)}
+        with MemoryNode("ckpt3", 4096) as node:   # fits ~3 snapshots
+            cm = CheckpointManager(str(tmp_path))
+            man = cm.save_far(0, tree, node)
+            brk = node._brk
+            for step in range(1, 10):             # would overflow without reuse
+                tree = {"w": jnp.full((16, 16), step, jnp.float32)}
+                man = cm.save_far(step, tree, node, reuse=man)
+            assert node._brk == brk               # no growth
+            step, back = cm.restore_far(tree, man, node)
+            assert step == 9
+            assert float(np.asarray(back["w"])[0, 0]) == 9.0
+
+    def test_far_checkpoint_digest_detects_corruption(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointManager
+        tree = {"w": jnp.ones((8, 8), jnp.float32)}
+        with MemoryNode("ckpt2", 1 << 20) as node:
+            cm = CheckpointManager(str(tmp_path))
+            man = cm.save_far(0, tree, node)
+            e = man["leaves"][0]
+            node.pool[e["addr"]] ^= 0xFF       # flip a byte on the node
+            with pytest.raises(IOError, match="digest"):
+                cm.restore_far(tree, man, node)
