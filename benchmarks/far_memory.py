@@ -8,14 +8,25 @@ Sweeps transfer size x tier x doorbell-batch depth:
   doorbell batch depths, projected on the far-memory (RDMA) path model
   with the per-doorbell setup amortized across the batch.
 
+Plus the *miss-pipeline* sweep (batch depth x backend x dirty ratio):
+``TieredStore`` cold misses fetched one page at a time (the serial
+baseline) vs through the asynchronous batched pipeline (doorbell-batched
+reads, node-side coalescing, overlapped two-hop fetch, prefetch), and
+evictions at several dirty ratios showing clean pages move zero cold
+bytes.  ``run(out=...)`` writes the miss-pipeline metrics (tok/s,
+miss-path seconds, bytes moved per tier) as JSON for the CI artifact.
+
 Reproduces the paper's qualitative result as a first-class row set: the
 DMA path wins on raw bandwidth, the verbs path pays a per-op setup that
 doorbell batching amortizes away — and emits fewer completions than WRs
 while doing so.
 
-    PYTHONPATH=src python -m benchmarks.far_memory [--quick]
+    PYTHONPATH=src python -m benchmarks.far_memory [--quick] [--json PATH]
 """
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
@@ -24,7 +35,8 @@ from repro.core.analytical import (bandwidth_gbps, doorbell_bandwidth_gbps,
                                    far_memory_path, tpu_host_path)
 from repro.core.channels import Direction
 from repro.core.engine import MemoryEngine
-from repro.rmem import MemoryNode, MemoryRegion, QueuePair
+from repro.rmem import (MemoryNode, MemoryRegion, QueuePair, TieredStore,
+                        make_backend)
 
 
 def _local_rows(sizes) -> None:
@@ -62,17 +74,153 @@ def _remote_rows(sizes, batches) -> None:
                      f"wrs={qp.wrs_posted} compl={qp.cq.n_completions}")
 
 
-def run(quick: bool = False) -> None:
+def _make_store(kind: str, n_pages: int, page_bytes: int, n_hot: int,
+                depth: int) -> TieredStore:
+    kw = dict(n_nodes=1, doorbell_batch=depth) if kind == "remote" else {}
+    return TieredStore(n_pages, (page_bytes,), dtype="uint8",
+                       n_hot_slots=n_hot,
+                       backend=make_backend(kind, n_pages, page_bytes, **kw))
+
+
+def _miss_rows(quick: bool) -> dict:
+    """Miss-path sweep: serial per-page fetch vs the batched pipeline."""
+    page_bytes = 1 << 15 if quick else 1 << 16
+    n_miss = 8 if quick else 16
+    depths = [1, 4] if quick else [1, 4, 8]
+    out: dict = {"page_bytes": page_bytes, "n_miss": n_miss, "rows": []}
+    for kind in ("local", "remote"):
+        for depth in (depths if kind == "remote" else [n_miss]):
+            with _make_store(kind, 2 * n_miss, page_bytes, n_miss,
+                             depth) as st:
+                for p in range(2 * n_miss):
+                    st.write_page(p, np.full(page_bytes, p % 251, np.uint8))
+                miss = list(range(n_miss))
+
+                def drop():
+                    for p in miss:
+                        st.release(p, writeback=False)
+
+                def serial():
+                    for p in miss:       # one miss, one fetch, at a time
+                        st.ensure([p])
+                    drop()
+
+                def pipelined():
+                    st.ensure(miss)      # batched loads + overlapped H2C
+                    drop()
+
+                def prefetched():
+                    st.prefetch(miss)    # fetch starts before the demand
+                    st.ensure(miss)
+                    drop()
+
+                # interleave the variants' repeats so slow container-CPU
+                # drift cancels out of the speedup ratio
+                serial(), pipelined(), prefetched()     # warmup
+                samples = ([], [], [])
+                for _ in range(5):
+                    for fn, acc in zip((serial, pipelined, prefetched),
+                                       samples):
+                        t0 = time.perf_counter()
+                        fn()
+                        acc.append(time.perf_counter() - t0)
+                t_ser, t_pipe, t_pre = (float(np.median(a))
+                                        for a in samples)
+                speedup = t_ser / t_pipe
+                proj = doorbell_bandwidth_gbps(
+                    far_memory_path() if kind == "remote" else
+                    tpu_host_path(), page_bytes, depth)
+                tag = f"miss_{kind}_db{depth}"
+                emit(f"{tag}_serial", t_ser / n_miss * 1e6,
+                     f"meas={n_miss * page_bytes / t_ser / 1e9:.2f}GB/s")
+                emit(f"{tag}_pipelined", t_pipe / n_miss * 1e6,
+                     f"meas={n_miss * page_bytes / t_pipe / 1e9:.2f}GB/s "
+                     f"speedup={speedup:.2f}x model={proj:.1f}GB/s")
+                emit(f"{tag}_prefetched", t_pre / n_miss * 1e6,
+                     f"speedup={t_ser / t_pre:.2f}x")
+                out["rows"].append({
+                    "backend": kind, "doorbell": depth,
+                    "serial_s": t_ser, "pipelined_s": t_pipe,
+                    "prefetched_s": t_pre, "speedup": speedup,
+                    "projected_gbps": proj,
+                    "bytes_moved": st.stats()["cold_bytes_moved"]})
+    return out
+
+
+def _dirty_rows(quick: bool) -> list:
+    """Eviction sweep over dirty ratio: clean pages move zero cold bytes."""
+    page_bytes = 1 << 14
+    n_hot = 4 if quick else 8
+    rows = []
+    for kind in ("local", "remote"):
+        for ratio in (0.0, 0.5, 1.0):
+            with _make_store(kind, 2 * n_hot, page_bytes, n_hot, 4) as st:
+                for p in range(2 * n_hot):
+                    st.write_page(p, np.full(page_bytes, p % 251, np.uint8))
+                st.ensure(list(range(n_hot)))
+                n_dirty = int(round(ratio * n_hot))
+                for p in range(n_dirty):
+                    st.mark_dirty(p)
+                stored0 = st.backend.stats()["bytes_stored"]
+                c2h0 = st.c2h_bytes
+                t = time_call(
+                    lambda: st.ensure(list(range(n_hot, 2 * n_hot))),
+                    repeats=1, warmup=0)    # one eviction wave
+                s = st.stats()
+                wb = st.backend.stats()["bytes_stored"] - stored0
+                emit(f"evict_{kind}_dirty{int(ratio * 100)}",
+                     t / n_hot * 1e6,
+                     f"writeback={wb}B c2h={st.c2h_bytes - c2h0}B "
+                     f"skipped={s['writeback_bytes_skipped']}B")
+                rows.append({
+                    "backend": kind, "dirty_ratio": ratio,
+                    "evictions": s["evictions"],
+                    "clean_evictions": s["clean_evictions"],
+                    "writeback_bytes": wb,
+                    "c2h_bytes": st.c2h_bytes - c2h0,
+                    "writeback_bytes_skipped":
+                        s["writeback_bytes_skipped"]})
+    return rows
+
+
+def _serve_metrics(quick: bool) -> dict:
+    """Serve run with remote KV paging: tok/s + per-tier bytes."""
+    from repro.launch.serve import main as serve_main
+    n_req, max_new = (4, 8) if quick else (8, 16)
+    res = serve_main(["--smoke", "--requests", str(n_req),
+                      "--max-new", str(max_new), "--slots", "2",
+                      "--kv-paging", "--kv-backend", "remote"])
+    kv = res.get("kv", {})
+    return {"tok_per_s": res["tok_per_s"],
+            "requests": res["requests"],
+            "h2c_bytes": kv.get("h2c_bytes", 0),
+            "c2h_bytes": kv.get("c2h_bytes", 0),
+            "cold_bytes_moved": kv.get("cold_bytes_moved", 0),
+            "prefetch_hits": kv.get("prefetch_hits", 0)}
+
+
+def run(quick: bool = False, out: str = "") -> dict:
     sizes = [1 << 16, 1 << 20] if quick else [1 << 16, 1 << 18, 1 << 20,
                                               1 << 22]
     batches = [1, 4] if quick else [1, 4, 16]
     _local_rows(sizes)
     _remote_rows(sizes, batches)
+    metrics = {"miss_pipeline": _miss_rows(quick),
+               "dirty_sweep": _dirty_rows(quick)}
+    if out:
+        metrics["serve"] = _serve_metrics(quick)
+        with open(out, "w") as f:
+            json.dump(metrics, f, indent=2)
+        print(f"# wrote {out}", flush=True)
+    return metrics
 
 
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="write miss-pipeline metrics JSON here")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=ap.parse_args().quick)
+    run(quick=args.quick, out=args.json)

@@ -31,8 +31,16 @@ MODULES = [
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick sweeps + miss-pipeline JSON")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="",
+                    help="miss-pipeline metrics JSON path (farmem module); "
+                         "defaults to BENCH_miss_pipeline.json with --smoke")
     args = ap.parse_args(argv)
+    quick = args.quick or args.smoke
+    json_out = args.json or ("BENCH_miss_pipeline.json" if args.smoke
+                             else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -41,7 +49,10 @@ def main(argv=None) -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            mod.run(quick=args.quick)
+            if json_out and mod is far_memory:
+                mod.run(quick=quick, out=json_out)
+            else:
+                mod.run(quick=quick)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -35,7 +35,13 @@ class CompletionMode(enum.Enum):
 
 @dataclass
 class Transfer:
-    """One submitted (possibly multi-chunk) transfer."""
+    """One submitted (possibly multi-chunk) transfer.
+
+    Multi-chunk C2H transfers assemble in place: the pool preallocates one
+    host buffer and each channel lands its chunk directly into a view of it
+    (``_dest_views``), so the result is one copy per chunk instead of a
+    device_get copy plus an ``np.concatenate`` pass.
+    """
     direction: Direction
     n_chunks: int
     t_submit: float
@@ -46,6 +52,8 @@ class Transfer:
     _results: list = field(default_factory=list)
     _event: threading.Event = field(default_factory=threading.Event)
     _lock: threading.Lock = field(default_factory=threading.Lock)
+    _assemble: Optional[np.ndarray] = None      # preallocated C2H buffer
+    _dest_views: Optional[List[np.ndarray]] = None
     t_done: float = 0.0
 
     def _chunk_done(self, idx: int, out, nbytes: int) -> None:
@@ -81,6 +89,8 @@ class Transfer:
         for _, o in self._results:
             if isinstance(o, Exception):
                 raise o
+        if self._assemble is not None:
+            return self._assemble       # chunks already landed in place
         parts = [o for _, o in sorted(self._results, key=lambda p: p[0])]
         if self.n_chunks == 1:
             return parts[0]
@@ -123,6 +133,11 @@ class Channel:
                 if transfer.direction == Direction.H2C:
                     out = jax.device_put(payload, transfer.device)
                     out.block_until_ready()
+                    nbytes = out.nbytes
+                elif transfer._dest_views is not None:
+                    # land the chunk straight in the preallocated buffer
+                    out = transfer._dest_views[idx]
+                    np.copyto(out, jax.device_get(payload))
                     nbytes = out.nbytes
                 else:
                     out = np.asarray(jax.device_get(payload))
@@ -174,6 +189,18 @@ class ChannelPool:
                       t_submit=time.perf_counter(), device=self.device,
                       on_complete=on_complete if
                       mode == CompletionMode.INTERRUPT else None)
+        if direction == Direction.C2H and len(chunks) > 1:
+            try:
+                buf = np.empty(arr.shape, np.dtype(arr.dtype))
+            except TypeError:
+                buf = None                  # exotic dtype: fall back to concat
+            if buf is not None:
+                tr._assemble = buf
+                views, off = [], 0
+                for c in chunks:
+                    views.append(buf[off:off + c.shape[0]])
+                    off += c.shape[0]
+                tr._dest_views = views
         for i, c in enumerate(chunks):
             self.channels[self._rr % self.n_channels].submit((tr, i, c))
             self._rr += 1

@@ -13,7 +13,11 @@ serving: hot pages in HBM slots, cold pages behind a pluggable tier
 backend — host RAM by default, far-memory nodes via RDMA-style verbs with
 ``backend=rmem.RemoteBackend(...)``.  Since the rmem refactor it is a thin
 alias over ``repro.rmem.store.TieredStore`` (DESIGN.md §4.3), kept for the
-established constructor spelling (``n_hbm_slots``).
+established constructor spelling (``n_hbm_slots``) — and so inherits the
+asynchronous batched miss pipeline: ``prefetch(pages)`` to start fetches
+without blocking, doorbell-batched ``ensure`` misses with overlapped
+two-hop staging, and dirty-page tracking (``mark_dirty``/``update_page``)
+so clean evictions move zero cold bytes.
 """
 from __future__ import annotations
 
@@ -88,9 +92,11 @@ class KVPager(TieredStore):
 
     The KV cache is split into fixed-size pages; ``n_hbm_slots`` pages stay
     device-resident and ``ensure(pages)`` makes the requested pages
-    resident (H2C), evicting LRU pages (C2H) as needed — transfer sizes
-    are exactly the paper's sweep knob.  The cold side defaults to host
-    RAM; pass ``backend=repro.rmem.RemoteBackend(...)`` to page against
+    resident (H2C), evicting LRU pages (C2H only when dirty) as needed —
+    transfer sizes are exactly the paper's sweep knob.  Misses run through
+    the batched two-hop pipeline, and ``prefetch(pages)`` hides page-in
+    latency behind foreground work.  The cold side defaults to host RAM;
+    pass ``backend=repro.rmem.RemoteBackend(...)`` to page against
     far-memory nodes instead.
     """
 

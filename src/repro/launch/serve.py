@@ -10,6 +10,14 @@ before serving.  ``--kv-backend`` picks the cold tier: ``local`` (host
 RAM, the XDMA/QDMA pattern) or ``remote`` (far-memory nodes behind
 RDMA-style verbs, DESIGN.md §4).
 
+Admission is *prefetch-pipelined* (DESIGN.md §3.3): right after a slot's
+cache is spilled cold, ``TieredStore.prefetch`` starts its asynchronous
+fetch, and the blocking ``ensure`` only happens after every admission of
+the round has prefilled — so the verbs/gather leg of slot k overlaps slot
+k+1's prefill compute and the running decode cadence instead of stalling
+it.  Over-long prompts are rejected with ``Request.failed`` set; the
+engine keeps serving the rest.
+
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
                   [--kv-paging --kv-backend remote]
@@ -41,6 +49,7 @@ class Request:
     out_tokens: Optional[List[int]] = None
     t_submit: float = 0.0
     t_done: float = 0.0
+    failed: Optional[str] = None       # rejection reason (engine kept going)
 
 
 class ServeEngine:
@@ -103,18 +112,20 @@ class ServeEngine:
             out.append(b.at[tuple(idx)].set(o[tuple(src_idx)]))
         self.caches = jax.tree.unflatten(treedef, out)
 
-    def _page_cache(self, slot: int, caches1):
-        """Round-trip a slot's prefilled cache through the tiered store.
-
-        Pack to one byte page -> cold-tier store (host memcpy or one-sided
-        verbs) -> ``ensure`` fetches it back H2C -> unpack the
-        device-resident page into cache leaves.  Bit-exact by
-        construction, so serving output is invariant to the backend.
-        """
-        leaves, treedef = jax.tree.flatten(caches1)
+    def _page_store(self, slot: int, leaves) -> None:
+        """Pack a slot's prefilled cache to one byte page, spill it to the
+        cold tier, and *prefetch* it — the async fetch (one-sided verbs or
+        host gather) runs while admission moves on to other slots."""
         packed = np.concatenate(
             [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
         self.pager.write_page(slot, packed)
+        self.pager.prefetch([slot])
+
+    def _page_fetch(self, slot: int, leaves, treedef):
+        """Join the slot's in-flight prefetch (``ensure`` finds the bytes
+        already staged) and unpack the device-resident page into cache
+        leaves.  Bit-exact by construction, so serving output is invariant
+        to the backend."""
         dev_page = self.pager.ensure([slot])[slot]
         out, off = [], 0
         for l in leaves:
@@ -124,15 +135,38 @@ class ServeEngine:
         return jax.tree.unflatten(treedef, out)
 
     def _admit(self) -> None:
+        """Fill free slots from the queue (continuous batching).
+
+        Two-phase when paging: phase 1 prefills each admitted request,
+        spills its packed cache cold, and starts the page's *prefetch*;
+        phase 2 joins the fetches and installs.  Slot k's cold fetch is
+        in flight while slot k+1 is still prefilling, so paging latency
+        hides behind admission work instead of serializing after it.
+
+        Over-long prompts are rejected (marked failed with a reason) and
+        the engine keeps serving.
+        """
+        admitted = []            # (slot, req, first_tok, leaves/caches, def)
         for s in range(self.B):
             if self.slot_req[s] is not None:
                 continue
-            try:
-                req = self.queue.get_nowait()
-            except queue.Empty:
-                return
+            req = None
+            while req is None:
+                try:
+                    cand = self.queue.get_nowait()
+                except queue.Empty:
+                    break
+                P = len(cand.prompt)
+                if P >= self.max_len:
+                    cand.failed = (f"prompt length {P} >= engine max_len "
+                                   f"{self.max_len}")
+                    cand.t_done = time.time()
+                    self.done.append(cand)
+                    continue
+                req = cand
+            if req is None:
+                break
             P = len(req.prompt)
-            assert P < self.max_len
             batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
             if self.cfg.attention is not None and \
                     self.cfg.attention.mrope_sections is not None:
@@ -142,11 +176,18 @@ class ServeEngine:
             caches1, logits = self.prefill_1(self.params, batch, caches1)
             tok = int(jnp.argmax(logits[0]))
             if self.pager is not None:
-                caches1 = self._page_cache(s, caches1)
+                leaves, treedef = jax.tree.flatten(caches1)
+                self._page_store(s, leaves)
+                admitted.append((s, req, tok, leaves, treedef))
+            else:
+                admitted.append((s, req, tok, caches1, None))
+        for s, req, tok, payload, treedef in admitted:
+            caches1 = payload if treedef is None else \
+                self._page_fetch(s, payload, treedef)
             self._slot_cache_set(s, caches1)
             self.slot_req[s] = req
             self.slot_left[s] = req.max_new - 1
-            self.slot_pos[s] = P
+            self.slot_pos[s] = len(req.prompt)
             self.cur_tokens[s, 0] = tok
             req.out_tokens.append(tok)
 
@@ -223,14 +264,16 @@ def main(argv=None) -> dict:
             max_new=args.max_new))
     eng.run_until_drained()
     dt = time.time() - t0
-    toks = sum(len(r.out_tokens) for r in eng.done)
-    lat = [r.t_done - r.t_submit for r in eng.done]
-    print(f"[serve] {len(eng.done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s), p50 latency {np.median(lat):.2f}s",
-          flush=True)
-    result = {"requests": len(eng.done), "tokens": toks, "seconds": dt,
-              "tok_per_s": toks / dt,
-              "outputs": {r.rid: list(r.out_tokens) for r in eng.done}}
+    served = [r for r in eng.done if r.failed is None]
+    failed = [r for r in eng.done if r.failed is not None]
+    toks = sum(len(r.out_tokens) for r in served)
+    lat = [r.t_done - r.t_submit for r in served] or [0.0]
+    print(f"[serve] {len(served)} requests ({len(failed)} rejected), "
+          f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s), "
+          f"p50 latency {np.median(lat):.2f}s", flush=True)
+    result = {"requests": len(served), "tokens": toks, "seconds": dt,
+              "tok_per_s": toks / dt, "rejected": len(failed),
+              "outputs": {r.rid: list(r.out_tokens) for r in served}}
     if eng.pager is not None:
         kv = eng.pager.stats()
         cold = kv["cold"]

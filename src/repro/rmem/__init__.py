@@ -8,10 +8,11 @@ Public API:
     MemoryRegion, QueuePair, CompletionQueue, WorkCompletion  (verbs)
     MemoryNode, AddressMap, MapEntry                          (memory nodes)
     TierBackend, LocalHostBackend, RemoteBackend, make_backend (backends)
-    TieredStore                                               (HBM over cold tier)
+    PendingIO                                  (async batched tier handle)
+    TieredStore                                (HBM over cold tier)
 """
-from repro.rmem.backend import (LocalHostBackend, RemoteBackend, TierBackend,
-                                make_backend)
+from repro.rmem.backend import (LocalHostBackend, PendingIO, RemoteBackend,
+                                TierBackend, make_backend)
 from repro.rmem.node import AddressMap, MapEntry, MemoryNode
 from repro.rmem.store import TieredStore
 from repro.rmem.verbs import (CompletionQueue, MemoryRegion, OpCode,
@@ -22,5 +23,5 @@ __all__ = [
     "OpCode", "WCStatus",
     "MemoryNode", "AddressMap", "MapEntry",
     "TierBackend", "LocalHostBackend", "RemoteBackend", "make_backend",
-    "TieredStore",
+    "PendingIO", "TieredStore",
 ]

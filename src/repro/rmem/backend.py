@@ -17,11 +17,19 @@ store is a one-sided write and every load a one-sided read.
 Both report measured seconds plus *projected* seconds on their analytical
 path model (``core/analytical.py``), so benches can contrast container
 measurements with target-part projections per tier.
+
+The batched surface (``load_many``/``store_many`` and the ``*_async``
+variants returning ``PendingIO`` handles) is the miss pipeline's
+foundation: ``RemoteBackend`` maps a page set onto read/write doorbells
+(one completion fence per doorbell, node-side coalescing into one staged
+hop), ``LocalHostBackend`` onto a single vectorized row gather/scatter —
+so a miss set of N pages costs one setup, not N.
 """
 from __future__ import annotations
 
 import time
-from typing import Optional, Protocol, Sequence, runtime_checkable
+from typing import Any, Callable, List, Optional, Protocol, Sequence, \
+    runtime_checkable
 
 import numpy as np
 
@@ -30,6 +38,33 @@ from repro.core.analytical import (PathModel, doorbell_bandwidth_gbps,
 from repro.core.channels import CompletionMode, Direction
 from repro.rmem.node import AddressMap, MemoryNode
 from repro.rmem.verbs import CompletionQueue, MemoryRegion, QueuePair
+
+
+class PendingIO:
+    """Handle for an in-flight batched tier operation.
+
+    ``wait()`` blocks until the bytes have landed and returns the result —
+    an ``(n, page_bytes)`` uint8 array for loads, ``None`` for stores.
+    Idempotent: repeated waits return the same result.  Backends whose
+    transfers complete inline (host memcpy) return already-finished
+    handles, so callers pipeline uniformly over any tier.
+    """
+
+    def __init__(self, finalize: Callable[[float], Any]):
+        self._finalize = finalize
+        self._result: Any = None
+        self._done = False
+
+    def wait(self, timeout: float = 30.0):
+        if not self._done:
+            self._result = self._finalize(timeout)
+            self._done = True
+        return self._result
+
+    @classmethod
+    def ready(cls, result: Any = None) -> "PendingIO":
+        io = cls(lambda _t: result)
+        return io
 
 
 @runtime_checkable
@@ -48,6 +83,25 @@ class TierBackend(Protocol):
         """Return the page's bytes (uint8 view/copy, page_bytes long)."""
         ...
 
+    def store_many(self, pages: Sequence[int],
+                   values: Sequence[np.ndarray]) -> None:
+        """Store a batch of full pages in one amortized operation."""
+        ...
+
+    def load_many(self, pages: Sequence[int]) -> np.ndarray:
+        """Load a batch of pages; returns an (n, page_bytes) uint8 array."""
+        ...
+
+    def store_many_async(self, pages: Sequence[int],
+                         values: Sequence[np.ndarray]) -> PendingIO:
+        """Start a batched store; ``wait()`` fences it."""
+        ...
+
+    def load_many_async(self, pages: Sequence[int]) -> PendingIO:
+        """Start a batched load; ``wait()`` returns the (n, page_bytes)
+        array once every page's bytes have landed."""
+        ...
+
     def path_model(self) -> PathModel:
         """Analytical model of this tier's link (for projections)."""
         ...
@@ -62,17 +116,24 @@ class TierBackend(Protocol):
 class _AccountingMixin:
     bytes_stored: int = 0
     bytes_loaded: int = 0
-    store_ops: int = 0
-    load_ops: int = 0
+    store_ops: int = 0          # pages stored
+    load_ops: int = 0           # pages loaded
+    store_batches: int = 0      # amortized operations (1 per batched call)
+    load_batches: int = 0
     seconds_busy: float = 0.0
 
-    def _account(self, nbytes: int, dt: float, is_store: bool) -> None:
+    def _account(self, nbytes: int, dt: float, is_store: bool,
+                 n_ops: int = 1) -> None:
+        if n_ops < 1:
+            return
         if is_store:
             self.bytes_stored += nbytes
-            self.store_ops += 1
+            self.store_ops += n_ops
+            self.store_batches += 1
         else:
             self.bytes_loaded += nbytes
-            self.load_ops += 1
+            self.load_ops += n_ops
+            self.load_batches += 1
         self.seconds_busy += dt
 
     def projected_seconds(self, nbytes: int, batch: int = 1,
@@ -88,6 +149,8 @@ class _AccountingMixin:
                 "bytes_loaded": self.bytes_loaded,
                 "store_ops": self.store_ops,
                 "load_ops": self.load_ops,
+                "store_batches": self.store_batches,
+                "load_batches": self.load_batches,
                 "seconds_busy": self.seconds_busy}
 
 
@@ -122,6 +185,46 @@ class LocalHostBackend(_AccountingMixin):
         out = self.mem[page].copy()
         self._account(out.size, time.perf_counter() - t0, is_store=False)
         return out
+
+    # -- batched surface (vectorized row gather/scatter) -----------------
+    def store_many(self, pages: Sequence[int],
+                   values: Sequence[np.ndarray]) -> None:
+        pages = list(pages)
+        if len(pages) != len(values):
+            raise ValueError(f"{len(pages)} pages vs {len(values)} values")
+        flats = [np.ascontiguousarray(v).reshape(-1).view(np.uint8)
+                 for v in values]
+        for p, f in zip(pages, flats):
+            self._check(p, f.size)
+        t0 = time.perf_counter()
+        if flats and all(f.size == self.page_bytes for f in flats):
+            self.mem[np.asarray(pages, np.int64)] = np.stack(flats)
+        else:
+            for p, f in zip(pages, flats):
+                self.mem[p, :f.size] = f
+        self._account(sum(f.size for f in flats),
+                      time.perf_counter() - t0, is_store=True,
+                      n_ops=len(pages))
+
+    def load_many(self, pages: Sequence[int]) -> np.ndarray:
+        pages = list(pages)
+        for p in pages:
+            self._check(p, 0)
+        t0 = time.perf_counter()
+        if not pages:
+            return np.empty((0, self.page_bytes), np.uint8)
+        out = self.mem[np.asarray(pages, np.int64)]   # one row gather
+        self._account(out.nbytes, time.perf_counter() - t0, is_store=False,
+                      n_ops=len(pages))
+        return out
+
+    def store_many_async(self, pages: Sequence[int],
+                         values: Sequence[np.ndarray]) -> PendingIO:
+        self.store_many(pages, values)      # host memcpy completes inline
+        return PendingIO.ready()
+
+    def load_many_async(self, pages: Sequence[int]) -> PendingIO:
+        return PendingIO.ready(self.load_many(pages))
 
     def path_model(self) -> PathModel:
         return tpu_host_path()
@@ -172,6 +275,14 @@ class RemoteBackend(_AccountingMixin):
         if nbytes > self.page_bytes:
             raise ValueError(f"{nbytes} B > page size {self.page_bytes}")
 
+    def _drain_cq(self) -> None:
+        """Discard accumulated completions.  The batched paths fence on
+        doorbells directly, so without this the signaled-WR completions
+        would pile up in the ring unboundedly (the sync ``load`` drains it
+        as a side effect of ``wait_wr``)."""
+        while self.cq.poll(256):
+            pass
+
     def store(self, page: int, value: np.ndarray) -> None:
         flat = np.ascontiguousarray(value).reshape(-1).view(np.uint8)
         self._check(page, flat.size)
@@ -185,12 +296,92 @@ class RemoteBackend(_AccountingMixin):
     def load(self, page: int) -> np.ndarray:
         self._check(page, 0)
         t0 = time.perf_counter()
-        self.qp.flush()            # writes posted before this read are fenced
+        # conditional fence: flush() is a no-op fast path (that still
+        # surfaces deferred async errors) unless WRs are outstanding
+        self.qp.flush()
         self.qp.read(self.mr, page * self.page_bytes,
                      page * self.page_bytes, self.page_bytes)
         out = self._staging[page].copy()
         self._account(out.size, time.perf_counter() - t0, is_store=False)
         return out
+
+    # -- batched surface (doorbell-batched verbs) ------------------------
+    def store_many(self, pages: Sequence[int],
+                   values: Sequence[np.ndarray]) -> None:
+        """Batched stores: writes accumulate into doorbells at the QP's
+        batch depth; like ``store``, the final partial doorbell stays
+        pending for write combining (``flush()`` or a later load fences)."""
+        pages = list(pages)
+        if len(pages) != len(values):
+            raise ValueError(f"{len(pages)} pages vs {len(values)} values")
+        t0 = time.perf_counter()
+        total = 0
+        for p, v in zip(pages, values):
+            flat = np.ascontiguousarray(v).reshape(-1).view(np.uint8)
+            self._check(p, flat.size)
+            self._staging[p, :flat.size] = flat
+            self.qp.post_write(self.mr, p * self.page_bytes,
+                               p * self.page_bytes, self.page_bytes)
+            total += flat.size
+        self._account(total, time.perf_counter() - t0, is_store=True,
+                      n_ops=len(pages))
+
+    def store_many_async(self, pages: Sequence[int],
+                         values: Sequence[np.ndarray]) -> PendingIO:
+        """Batched stores with a completion handle: rings the tail doorbell
+        so the batch can drain, ``wait()`` fences exactly these writes."""
+        pages = list(pages)
+        with self.qp.collect_doorbells() as coll:
+            self.store_many(pages, values)
+            self.qp.ring_doorbell()
+
+        def finalize(timeout: float):
+            coll.wait(timeout)
+            self.qp.raise_deferred()
+            self._drain_cq()
+            return None
+        return PendingIO(finalize)
+
+    def load_many(self, pages: Sequence[int]) -> np.ndarray:
+        return self.load_many_async(pages).wait()
+
+    def load_many_async(self, pages: Sequence[int]) -> PendingIO:
+        """Doorbell-batched reads with completion-carried delivery.
+
+        Reads are posted back-to-back (accumulating into doorbells at the
+        QP's batch depth, coalesced node-side into one staged hop per
+        doorbell) and the tail doorbell is rung immediately; no QP-wide
+        flush — FIFO execution per node already orders these reads after
+        any writes posted earlier on this QP, including same-doorbell
+        writes.  ``wait()`` fences only this call's doorbells, then gathers
+        the landed staging rows.
+        """
+        pages = list(pages)
+        for p in pages:
+            self._check(p, 0)
+        t0 = time.perf_counter()
+        with self.qp.collect_doorbells() as coll:
+            for p in pages:
+                self.qp.post_read(self.mr, p * self.page_bytes,
+                                  p * self.page_bytes, self.page_bytes)
+            self.qp.ring_doorbell()
+        t_issued = time.perf_counter()
+
+        def finalize(timeout: float):
+            if not pages:
+                return np.empty((0, self.page_bytes), np.uint8)
+            t_join = time.perf_counter()
+            coll.wait(timeout)
+            self.qp.raise_deferred()
+            self._drain_cq()
+            out = self._staging[np.asarray(pages, np.int64)]  # row gather
+            # busy time = issue cost + time blocked joining; the caller's
+            # think-time between issue and join (the prefetch overlap win)
+            # is explicitly NOT charged to the tier
+            dt = (t_issued - t0) + (time.perf_counter() - t_join)
+            self._account(out.nbytes, dt, is_store=False, n_ops=len(pages))
+            return out
+        return PendingIO(finalize)
 
     def flush(self) -> None:
         self.qp.flush()

@@ -2,10 +2,14 @@
 
 ``MemoryNode`` models one NIC-attached DRAM pool: a server thread owning a
 flat byte pool, executing one-sided WRs FIFO per doorbell — the DMA engine
-of an off-path SmartNIC (arXiv:2212.07868).  Every WR stages its payload
-through ``jax.device_put`` onto the node's jax device, so the cross-device
-hop (the ICI/RDMA-link analogue) is physically exercised, then bytes land
-in (or leave) the numpy pool, which stays byte-addressable for verbs.
+of an off-path SmartNIC (arXiv:2212.07868).  Payloads stage through
+``jax.device_put`` onto the node's jax device, so the cross-device hop
+(the ICI/RDMA-link analogue) is physically exercised, then bytes land in
+(or leave) the numpy pool, which stays byte-addressable for verbs.  Runs
+of same-opcode WRs within one doorbell are *coalesced*: the whole run is
+gathered into a single staged transfer (one ``device_put`` + one sync), so
+a doorbell of N batched reads or writes pays one setup instead of N — the
+amortization the miss pipeline (DESIGN.md §3.3) is built on.
 
 ``AddressMap`` is the SimBricks-memswitch routing table: ordered
 ``(vaddr_start, vaddr_end, node, phys_start)`` ranges; an access spanning a
@@ -43,6 +47,8 @@ class MemoryNode:
         self.bytes_in = 0                   # one-sided writes landed
         self.bytes_out = 0                  # one-sided reads served
         self.ops = 0
+        self.staged_hops = 0                # device transfers actually issued
+        self.coalesced_runs = 0             # multi-WR runs served by one hop
         self._thread.start()
 
     # -- allocation ------------------------------------------------------
@@ -81,19 +87,35 @@ class MemoryNode:
             if item is None:
                 return
             wrs, bell = item
-            for wr in wrs:
-                err: Optional[Exception] = None
-                try:
-                    self._execute_one(wr)
-                except Exception as e:
-                    err = e
-                bell.wr_done(wr, err)
+            # coalesce runs of same-opcode WRs: one staged device hop per
+            # run (the doorbell amortization — N batched reads/writes cost
+            # one device_put + one sync instead of N)
+            i = 0
+            while i < len(wrs):
+                j = i + 1
+                while j < len(wrs) and wrs[j].opcode == wrs[i].opcode:
+                    j += 1
+                run = wrs[i:j]
+                if len(run) == 1:
+                    err: Optional[Exception] = None
+                    try:
+                        self._execute_one(run[0])
+                    except Exception as e:
+                        err = e
+                    bell.wr_done(run[0], err)
+                else:
+                    self._execute_run(run, bell)
+                i = j
 
-    def _execute_one(self, wr: WorkRequest) -> None:
+    def _check_bounds(self, wr: WorkRequest) -> None:
         if wr.phys_addr < 0 or wr.phys_addr + wr.nbytes > self.capacity_bytes:
             raise IndexError(f"{self.name}: phys [{wr.phys_addr}, "
                              f"{wr.phys_addr + wr.nbytes}) out of pool")
+
+    def _execute_one(self, wr: WorkRequest) -> None:
+        self._check_bounds(wr)
         self.ops += 1
+        self.staged_hops += 1
         if wr.opcode == OpCode.WRITE:
             src = wr.mr.view(wr.local_offset, wr.nbytes)
             staged = jax.device_put(src, self.device)   # the link hop
@@ -108,9 +130,66 @@ class MemoryNode:
             wr.mr.view(wr.local_offset, wr.nbytes)[:] = np.asarray(staged)
             self.bytes_out += wr.nbytes
 
+    def _execute_run(self, run: Sequence[WorkRequest], bell: _Doorbell) \
+            -> None:
+        """Serve a same-opcode run with one gathered device transfer.
+
+        On any failure the run falls back to per-WR execution so the error
+        attaches to the precise WR; re-executing already-landed WRs is safe
+        because one-sided reads/writes are idempotent.
+        """
+        try:
+            for wr in run:
+                self._check_bounds(wr)
+                wr.mr.view(wr.local_offset, wr.nbytes)  # validate MR range
+            if run[0].opcode == OpCode.WRITE:
+                gathered = np.concatenate(
+                    [wr.mr.view(wr.local_offset, wr.nbytes) for wr in run])
+                staged = jax.device_put(gathered, self.device)
+                staged.block_until_ready()
+                flat = np.asarray(staged)
+                off = 0
+                for wr in run:
+                    self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes] = \
+                        flat[off:off + wr.nbytes]
+                    self.bytes_in += wr.nbytes
+                    off += wr.nbytes
+            else:
+                gathered = np.concatenate(
+                    [self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes]
+                     for wr in run])
+                staged = jax.device_put(gathered, self.device)
+                staged.block_until_ready()
+                flat = np.asarray(staged)
+                off = 0
+                for wr in run:
+                    wr.mr.view(wr.local_offset, wr.nbytes)[:] = \
+                        flat[off:off + wr.nbytes]
+                    self.bytes_out += wr.nbytes
+                    off += wr.nbytes
+            self.ops += len(run)
+            self.staged_hops += 1
+            self.coalesced_runs += 1
+        except Exception:
+            for wr in run:
+                err: Optional[Exception] = None
+                try:
+                    self._execute_one(wr)
+                except Exception as e:
+                    err = e
+                bell.wr_done(wr, err)
+            return
+        # deliver completions OUTSIDE the recovery path: an exception from
+        # delivery itself (e.g. an INTERRUPT-mode callback raising) must
+        # not trigger re-execution and double wr_done on a drained bell
+        for wr in run:
+            bell.wr_done(wr, None)
+
     def stats(self) -> dict:
         return {"name": self.name, "bytes_in": self.bytes_in,
                 "bytes_out": self.bytes_out, "ops": self.ops,
+                "staged_hops": self.staged_hops,
+                "coalesced_runs": self.coalesced_runs,
                 "allocated": self._brk, "capacity": self.capacity_bytes}
 
     def close(self) -> None:

@@ -8,20 +8,40 @@ flows through the NMA ``MemoryEngine`` (H2C/C2H), so with a remote backend
 a page miss is the paper's full two-hop path: node --verbs--> host staging
 --H2C--> HBM.
 
-Residency algorithm is unchanged from ``KVPager``: LRU eviction over
-``n_hot_slots`` device slots, batch-staged H2C fills, ``h2c_bytes`` /
-``c2h_bytes`` accounting; cold-tier traffic is accounted by the backend.
+The miss path is an asynchronous, batched pipeline (DESIGN.md §3.3):
+
+* a miss set's cold loads are batched into ``load_many_async`` calls of
+  doorbell-depth groups, all issued up front, so the verbs/gather setup is
+  paid once per group rather than once per page;
+* the two hops overlap — group k's H2C staging starts while group k+1's
+  verbs fetch is still in flight on the node threads;
+* ``prefetch(pages)`` starts that pipeline without blocking, so callers
+  (e.g. serve admission) can hide page-in latency behind other work and
+  ``ensure`` joins the in-flight fetch instead of re-issuing it;
+* *dirty tracking*: pages loaded from (or stored to) the cold tier are
+  clean; only ``update_page``/``mark_dirty`` dirties them.  Eviction and
+  release skip the C2H drain + cold store for clean pages entirely — a
+  clean eviction moves zero cold bytes.
+
+Residency is otherwise unchanged from ``KVPager``: LRU eviction over
+``n_hot_slots`` device slots, ``h2c_bytes``/``c2h_bytes`` accounting;
+cold-tier traffic is accounted by the backend.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import MemoryEngine
-from repro.rmem.backend import LocalHostBackend, TierBackend
+from repro.rmem.backend import LocalHostBackend, PendingIO, TierBackend
+
+# device-side row extraction for group-staged H2C fills: one compile per
+# group shape, then ~µs per row — far cheaper than per-page device_put
+_device_row = jax.jit(
+    lambda x, i: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False))
 
 
 class TieredStore:
@@ -53,6 +73,14 @@ class TieredStore:
         self._last_use = [0] * self.n_hot_slots
         self.h2c_bytes = 0
         self.c2h_bytes = 0
+        # miss pipeline state
+        self._dirty: set = set()            # device copy newer than cold
+        self._prefetch: Dict[int, Tuple[PendingIO, int]] = {}
+        self.evictions = 0
+        self.clean_evictions = 0
+        self.writeback_bytes_skipped = 0
+        self.prefetch_issued = 0
+        self.prefetch_hits = 0
 
     # -- cold-tier typed views ------------------------------------------
     def _to_typed(self, raw: np.ndarray) -> np.ndarray:
@@ -72,51 +100,196 @@ class TieredStore:
         return self._to_typed(self.backend.load(page))
 
     def write_page(self, page: int, value) -> None:
-        """Update a page (cold tier + device copy if resident)."""
+        """Update a page (cold tier + device copy if resident).
+
+        Both copies end in sync, so the page is clean afterwards; any
+        in-flight prefetch of the old bytes is invalidated.
+        """
         if page < 0 or page >= self.n_pages:
             raise IndexError(page)
         arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
+        stale = self._prefetch.pop(page, None)
+        if stale is not None:
+            # fence the in-flight read before overwriting its staging row,
+            # else the read scatters old bytes over the new value and a
+            # remote store would then push those stale bytes cold
+            try:
+                stale[0].wait()
+            except Exception:
+                pass                        # discarded fetch; store decides
         self.backend.store(page, arr.reshape(-1).view(np.uint8))
+        self._dirty.discard(page)
         if page in self.slot_of_page:
             s = self.slot_of_page[page]
             self.slots[s] = self.engine.write(arr).wait()
             self.h2c_bytes += self.page_bytes
+
+    # -- dirty tracking --------------------------------------------------
+    def mark_dirty(self, page: int) -> None:
+        """Flag a resident page's device copy as newer than its cold copy,
+        so the next eviction/release writes it back."""
+        if page not in self.slot_of_page:
+            raise KeyError(f"page {page} is not resident")
+        self._dirty.add(page)
+
+    def is_dirty(self, page: int) -> bool:
+        return page in self._dirty
+
+    def update_page(self, page: int, value) -> jax.Array:
+        """Device-side page update: installs ``value`` into the resident
+        page's hot slot (H2C) and marks it dirty — the cold copy is stale
+        until eviction/release writes it back."""
+        if page not in self.slot_of_page:
+            raise KeyError(f"page {page} is not resident")
+        arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
+        s = self.slot_of_page[page]
+        self.slots[s] = self.engine.write(arr).wait()
+        self.h2c_bytes += self.page_bytes
+        self._dirty.add(page)
+        return self.slots[s]
 
     # -- residency -------------------------------------------------------
     def _evict(self) -> int:
         s = min(range(self.n_hot_slots), key=lambda i: self._last_use[i])
         old = self.page_in_slot[s]
         if old is not None:
-            host = np.asarray(self.engine.read(self.slots[s]).wait())
-            self.c2h_bytes += self.page_bytes
-            self.backend.store(old, host.reshape(-1).view(np.uint8))
+            self.evictions += 1
+            if old in self._dirty:
+                host = np.asarray(self.engine.read(self.slots[s]).wait())
+                self.c2h_bytes += self.page_bytes
+                self.backend.store(old, host.reshape(-1).view(np.uint8))
+                self._dirty.discard(old)
+            else:
+                # clean page: the cold copy is already identical — skip the
+                # C2H drain and the cold store, moving zero bytes
+                self.clean_evictions += 1
+                self.writeback_bytes_skipped += self.page_bytes
             del self.slot_of_page[old]
         self.page_in_slot[s] = None
         return s
 
+    def _fetch_depth(self, n_missing: int) -> int:
+        """Cold-load group size: one doorbell per group on a verbs backend
+        (finest overlap granularity), a single vectorized batch otherwise."""
+        depth = getattr(self.backend, "doorbell_batch", 0) or n_missing
+        return max(1, depth)
+
+    def prefetch(self, pages: Sequence[int]) -> List[int]:
+        """Start the miss pipeline for ``pages`` without blocking.
+
+        Issues batched async cold loads for every non-resident page that
+        isn't already being fetched; returns the pages actually started.
+        A later ``ensure`` joins the in-flight fetch (completion-carried:
+        by then the bytes are typically already in host staging) instead
+        of paying the cold-tier round trip synchronously.
+        """
+        miss = []
+        for p in pages:
+            if p < 0 or p >= self.n_pages:
+                raise IndexError(p)
+            if p not in self.slot_of_page and p not in self._prefetch \
+                    and p not in miss:
+                miss.append(p)
+        depth = self._fetch_depth(len(miss))
+        for i in range(0, len(miss), depth):
+            group = miss[i:i + depth]
+            io = self.backend.load_many_async(group)
+            for k, p in enumerate(group):
+                self._prefetch[p] = (io, k)
+        self.prefetch_issued += len(miss)
+        return miss
+
     def ensure(self, pages) -> Dict[int, jax.Array]:
-        """Make pages resident; returns {page: device_array}."""
+        """Make pages resident; returns {page: device_array}.
+
+        Misses run through the batched two-hop pipeline: every cold page's
+        verbs/gather load is issued asynchronously up front (doorbell-depth
+        groups), then each group's H2C staging starts as soon as its bytes
+        land — while later groups' cold fetches are still in flight.
+        Prefetched pages join their already-running fetch.
+        """
         if len(set(pages)) > self.n_hot_slots:
             raise ValueError(f"requested {len(set(pages))} pages > "
                              f"{self.n_hot_slots} hot slots")
-        missing = [p for p in pages if p not in self.slot_of_page]
-        # stage all H2C transfers first (multi-channel overlap), then place;
-        # bumping _last_use at assignment keeps one batch from re-evicting a
-        # slot whose H2C is still in flight
-        pending = []
-        for p in missing:
+        missing = []
+        for p in pages:
             if p < 0 or p >= self.n_pages:
                 raise IndexError(p)
-            s = self._evict()
-            self._clock += 1
-            self._last_use[s] = self._clock
-            typed = self._to_typed(self.backend.load(p))
-            pending.append((p, s, self.engine.write(typed)))
-            self.page_in_slot[s] = p
-            self.slot_of_page[p] = s
-        for p, s, tr in pending:
-            self.slots[s] = tr.wait()
-            self.h2c_bytes += self.page_bytes
+            if p in self.slot_of_page:
+                # bump already-resident requested pages NOW so the miss
+                # loop's evictions can't pick them as LRU victims
+                self._clock += 1
+                self._last_use[self.slot_of_page[p]] = self._clock
+            elif p not in missing:
+                missing.append(p)
+        # join in-flight prefetches; batch the rest into fresh async loads
+        fetched = [p for p in missing if p in self._prefetch]
+        cold = [p for p in missing if p not in self._prefetch]
+        self.prefetch_hits += len(fetched)
+        groups: List[Tuple[List[int], PendingIO, List[int]]] = []
+        if fetched:
+            ios: Dict[int, Tuple[PendingIO, List[int], List[int]]] = {}
+            for p in fetched:
+                io, k = self._prefetch.pop(p)
+                ent = ios.setdefault(id(io), (io, [], []))
+                ent[1].append(p)
+                ent[2].append(k)
+            groups.extend((ps, io, ks) for io, ps, ks in ios.values())
+        depth = self._fetch_depth(len(cold))
+        for i in range(0, len(cold), depth):
+            g = cold[i:i + depth]
+            groups.append((g, self.backend.load_many_async(g),
+                           list(range(len(g)))))
+        # stage each group as ONE H2C transfer as soon as its cold bytes
+        # land (later groups keep fetching meanwhile) and split rows
+        # device-side after the wait — the H2C setup is paid per group,
+        # not per page; bumping _last_use at assignment keeps one batch
+        # from re-evicting a slot whose H2C is still in flight
+        pending = []
+        assigned: List[Tuple[int, int]] = []    # (page, slot) this call
+        installed: set = set()                  # slots with arrays landed
+        try:
+            for group_pages, io, rows in groups:
+                raw = io.wait()
+                slots_g = []
+                for p in group_pages:
+                    s = self._evict()
+                    self._clock += 1
+                    self._last_use[s] = self._clock
+                    slots_g.append(s)
+                    assigned.append((p, s))
+                    self.page_in_slot[s] = p
+                    self.slot_of_page[p] = s
+                    self._dirty.discard(p)  # fresh from cold: clean
+                if len(group_pages) == 1:
+                    typed = self._to_typed(raw[rows[0]])
+                else:
+                    sel = raw if rows == list(range(len(raw))) else \
+                        raw[np.asarray(rows)]
+                    sel = np.ascontiguousarray(sel[:, :self.page_bytes])
+                    typed = sel.view(self._np_dtype).reshape(
+                        (len(group_pages),) + self.page_shape)
+                pending.append((slots_g, self.engine.write(typed)))
+            for slots_g, tr in pending:
+                dev = tr.wait()
+                if len(slots_g) == 1:
+                    self.slots[slots_g[0]] = dev
+                else:
+                    for k, s in enumerate(slots_g):
+                        self.slots[s] = _device_row(dev, k)
+                installed.update(slots_g)
+                self.h2c_bytes += self.page_bytes * len(slots_g)
+        except BaseException:
+            # a later group's fetch/stage failed: unmap every page of this
+            # call whose device array never landed, so no page is left
+            # "resident" pointing at a stale or empty slot
+            for p, s in assigned:
+                if s not in installed:
+                    self.slot_of_page.pop(p, None)
+                    self.page_in_slot[s] = None
+                    self.slots[s] = None
+                    self._last_use[s] = 0
+            raise
         out = {}
         for p in pages:
             s = self.slot_of_page[p]
@@ -125,15 +298,22 @@ class TieredStore:
             out[p] = self.slots[s]
         return out
 
-    def release(self, page: int, writeback: bool = False) -> None:
-        """Drop a page's residency (optionally draining it cold first)."""
+    def release(self, page: int, writeback: Optional[bool] = None) -> None:
+        """Drop a page's residency.
+
+        ``writeback=None`` (default) and ``True`` drain the page to the
+        cold tier *only if it is dirty* — clean pages already match their
+        cold copy, so they move zero bytes.  ``False`` discards the device
+        copy unconditionally (dirty state included).
+        """
         if page not in self.slot_of_page:
             return
         s = self.slot_of_page.pop(page)
-        if writeback:
+        if writeback is not False and page in self._dirty:
             host = np.asarray(self.engine.read(self.slots[s]).wait())
             self.c2h_bytes += self.page_bytes
             self.backend.store(page, host.reshape(-1).view(np.uint8))
+        self._dirty.discard(page)
         self.page_in_slot[s] = None
         self.slots[s] = None
         self._last_use[s] = 0
@@ -142,24 +322,44 @@ class TieredStore:
     def resident_pages(self):
         return sorted(self.slot_of_page)
 
+    @property
+    def dirty_pages(self):
+        return sorted(self._dirty)
+
     # -- accounting ------------------------------------------------------
     def stats(self) -> dict:
         cold = self.backend.stats()
         moved = cold.get("bytes_stored", 0) + cold.get("bytes_loaded", 0)
         batch = getattr(self.backend, "doorbell_batch", 1)
-        # stores batch up to the doorbell depth; loads are synchronous
-        # single-doorbell reads and never amortize their setup
+        # stores batch up to the doorbell depth; loads amortize by the
+        # observed pages-per-batched-call ratio of the miss pipeline
+        load_ops = cold.get("load_ops", 0)
+        load_batches = cold.get("load_batches", 0)
+        avg_load_batch = load_ops / load_batches if load_batches else 1.0
         projected = (
             self.backend.projected_seconds(self.page_bytes, batch)
             * cold.get("store_ops", 0)
-            + self.backend.projected_seconds(self.page_bytes, 1)
-            * cold.get("load_ops", 0))
+            + self.backend.projected_seconds(self.page_bytes,
+                                             max(avg_load_batch, 1.0))
+            * load_ops)
         return {"h2c_bytes": self.h2c_bytes, "c2h_bytes": self.c2h_bytes,
                 "page_bytes": self.page_bytes, "cold": cold,
                 "cold_bytes_moved": moved,
-                "cold_projected_seconds": projected}
+                "cold_projected_seconds": projected,
+                "evictions": self.evictions,
+                "clean_evictions": self.clean_evictions,
+                "dirty_evictions": self.evictions - self.clean_evictions,
+                "writeback_bytes_skipped": self.writeback_bytes_skipped,
+                "prefetch_issued": self.prefetch_issued,
+                "prefetch_hits": self.prefetch_hits}
 
     def close(self) -> None:
+        for io, _ in list(self._prefetch.values()):
+            try:
+                io.wait()
+            except Exception:
+                pass
+        self._prefetch.clear()
         self.backend.close()
         self.engine.close()
 

@@ -167,7 +167,10 @@ class _Doorbell:
 
     The signaled WR's completion is deferred until every WR of the batch
     (possibly split across nodes by the AddressMap) has executed — the
-    'only the last WR is signaled' RDMA idiom.
+    'only the last WR is signaled' RDMA idiom.  ``wait()`` blocks on that
+    drain directly, which is what the async backend paths fence on without
+    touching the CQ (completion-carried delivery: when the bell drains,
+    every READ's payload has already landed in its MR).
     """
 
     def __init__(self, wrs: Sequence[WorkRequest], cq: CompletionQueue,
@@ -180,6 +183,7 @@ class _Doorbell:
         self.signaled = [w for w in wrs if w.signaled]
         self.error: Optional[Exception] = None
         self._lock = threading.Lock()
+        self._drained = threading.Event()
 
     def wr_done(self, wr: WorkRequest, error: Optional[Exception]) -> None:
         with self._lock:
@@ -197,8 +201,21 @@ class _Doorbell:
                 nbytes=w.nbytes, batch_bytes=self.total_bytes,
                 batch_wrs=self.n_wrs, t_post=w.t_post, t_done=t_done,
                 error=self.error))
+        # QP bookkeeping (inflight count, deferred error) must settle
+        # BEFORE waiters wake, or a waiter could observe — and fail to
+        # clear — state that is still about to be written
         if self.on_drained is not None:
             self.on_drained(self)
+        self._drained.set()
+
+    def wait(self, timeout: float = 30.0) -> None:
+        """Block until every WR of this doorbell has executed; raises the
+        first WR error if any."""
+        if not self._drained.wait(timeout):
+            raise TimeoutError(
+                f"doorbell: {self.remaining}/{self.n_wrs} WRs in flight")
+        if self.error is not None:
+            raise self.error
 
 
 class QueuePair:
@@ -228,6 +245,7 @@ class QueuePair:
         self._inflight = 0                  # doorbells rung, not yet drained
         self._inflight_cv = threading.Condition()
         self._async_error: Optional[Exception] = None
+        self._collectors: List[List[_Doorbell]] = []
         # accounting (per-tier bandwidth/latency bookkeeping)
         self.bytes_written = 0
         self.bytes_read = 0
@@ -295,9 +313,9 @@ class QueuePair:
             by_node.setdefault(id(node), (node, []))[1].append(wr)
         return list(by_node.values())
 
-    def ring_doorbell(self) -> None:
+    def ring_doorbell(self) -> Optional[_Doorbell]:
         if not self._pending:
-            return
+            return None
         wrs, self._pending = self._pending, []
         if not any(w.signaled for w in wrs):
             wrs[-1].signaled = True    # last-WR-signaled batching
@@ -310,8 +328,61 @@ class QueuePair:
             self._inflight += 1
         bell = _Doorbell(flat, self.cq, on_drained=self._bell_drained)
         self.doorbells += 1
+        for coll in self._collectors:
+            coll.append(bell)
         for node, node_wrs in per_node:
             node.execute(node_wrs, bell)
+        return bell
+
+    class _BellCollector:
+        """Context manager capturing every doorbell rung inside its scope
+        (including auto-rings at batch depth) so async callers can fence on
+        exactly their own WRs instead of flushing the whole QP."""
+
+        def __init__(self, qp: "QueuePair"):
+            self.qp = qp
+            self.bells: List[_Doorbell] = []
+
+        def __enter__(self) -> "QueuePair._BellCollector":
+            self.qp._collectors.append(self.bells)
+            return self
+
+        def __exit__(self, *exc) -> None:
+            self.qp._collectors.remove(self.bells)
+
+        def wait(self, timeout: float = 30.0) -> None:
+            try:
+                for bell in self.bells:
+                    bell.wait(timeout)
+            except Exception as e:
+                # this error is reported here, to its own issuer — don't
+                # leave it deferred on the QP to poison a later fence
+                with self.qp._inflight_cv:
+                    if self.qp._async_error is e:
+                        self.qp._async_error = None
+                raise
+
+    def collect_doorbells(self) -> "_BellCollector":
+        return QueuePair._BellCollector(self)
+
+    def raise_deferred(self) -> None:
+        """Re-raise (once) an async error from an already-drained doorbell.
+        Unsignaled WRs report failures this way — callers that skip the
+        full fence still must not lose them."""
+        with self._inflight_cv:
+            if self._async_error is not None:
+                e, self._async_error = self._async_error, None
+                raise e
+
+    @property
+    def outstanding_wrs(self) -> int:
+        """Unfenced work: pending WRs (doorbell not rung) plus in-flight
+        doorbells.  Zero means ``flush()`` would be a no-op — callers use
+        this to fence conditionally instead of paying an unconditional
+        flush on every access."""
+        with self._inflight_cv:
+            inflight = self._inflight
+        return len(self._pending) + inflight
 
     def _bell_drained(self, bell: _Doorbell) -> None:
         with self._inflight_cv:
@@ -344,7 +415,17 @@ class QueuePair:
         return wc
 
     def flush(self, timeout: float = 30.0) -> None:
-        """Ring any pending doorbell and fence on ALL in-flight ones."""
+        """Ring any pending doorbell and fence on ALL in-flight ones.
+
+        Conditional on outstanding work: with nothing pending and nothing
+        in flight it only re-raises a deferred async error (if any) and
+        returns without ringing or waiting."""
+        if not self._pending:
+            with self._inflight_cv:
+                idle = self._inflight == 0
+            if idle:
+                self.raise_deferred()
+                return
         self.ring_doorbell()
         deadline = time.monotonic() + timeout
         with self._inflight_cv:

@@ -60,6 +60,17 @@ class TestChannels:
             back = pool.c2h(dev).wait()
             np.testing.assert_array_equal(back, x)
 
+    def test_c2h_multichunk_assembles_into_preallocated_buffer(self):
+        with ChannelPool(4, chunk_bytes=1 << 10) as pool:
+            x = np.arange(8192, dtype=np.float32).reshape(128, 64)
+            dev = pool.h2c(x).wait()
+            t = pool.c2h(dev)
+            back = t.wait()
+            assert t.n_chunks > 1
+            # chunks landed in place: the result IS the preallocated buffer
+            assert back is t._assemble
+            np.testing.assert_array_equal(back, x)
+
     def test_single_chunk_small(self):
         with ChannelPool(2, chunk_bytes=1 << 20) as pool:
             x = np.ones((4, 4), np.float32)
@@ -216,11 +227,14 @@ class TestEngineAndOffload:
         for p in range(12):
             pg.write_page(p, np.full((4, 8), p, np.float32))
         pg.ensure([0, 1, 2])
-        pg.ensure([3, 4, 5])      # evicts 0-2
+        pg.update_page(2, np.full((4, 8), 42.0, np.float32))  # dirty page 2
+        pg.ensure([3, 4, 5])      # evicts 0-2; only 2 needs writeback
         pg.ensure([6, 7])
-        res = pg.ensure([0])      # must come back intact from host
+        res = pg.ensure([0, 2])   # must come back intact from host
         assert float(res[0][0, 0]) == 0.0
-        assert pg.c2h_bytes > 0 and pg.h2c_bytes > 0
+        assert float(res[2][0, 0]) == 42.0
+        # clean evictions skip the C2H drain; the dirty one paid it
+        assert pg.c2h_bytes == pg.page_bytes and pg.h2c_bytes > 0
 
     def test_pager_rejects_oversubscription(self):
         pg = KVPager(n_pages=8, page_shape=(2, 2), n_hbm_slots=2)

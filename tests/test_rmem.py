@@ -1,5 +1,8 @@
 """rmem subsystem tests: verbs, memory nodes, address map, tiered store,
-serve integration, and far checkpoints (ISSUE 1 acceptance criteria)."""
+serve integration, far checkpoints (ISSUE 1), and the asynchronous batched
+miss pipeline (ISSUE 2: doorbell-batched reads, dirty-page residency,
+prefetch, overlapped two-hop fetches)."""
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -201,11 +204,15 @@ class TestTieredStore:
                          backend=be) as st:
             self._fill(st, 12)
             st.ensure([0, 1, 2])
-            st.ensure([3, 4, 5])          # evicts 0-2
+            st.update_page(1, np.full((4, 8), 41.0, np.float32))  # dirty
+            st.ensure([3, 4, 5])          # evicts 0-2 (1 needs writeback)
             st.ensure([6, 7])
-            res = st.ensure([0])          # back intact from the cold tier
+            res = st.ensure([0, 1])       # back intact from the cold tier
             assert float(np.asarray(res[0])[0, 0]) == 0.0
-            assert st.c2h_bytes > 0 and st.h2c_bytes > 0
+            assert float(np.asarray(res[1])[0, 0]) == 41.0  # dirty persisted
+            # only the dirty page paid the C2H drain on eviction
+            assert st.c2h_bytes == st.page_bytes
+            assert st.h2c_bytes > 0
 
     def test_lru_evicts_least_recently_used(self):
         with TieredStore(6, (2, 2), dtype="float32", n_hot_slots=3) as st:
@@ -220,13 +227,18 @@ class TestTieredStore:
         with TieredStore(4, (8,), dtype="float32", n_hot_slots=2) as st:
             self._fill(st, 4)
             st.ensure([0, 1])
-            st.ensure([2, 3])             # 2 evictions + 2 fills
+            st.ensure([2, 3])             # 2 clean evictions + 2 fills
             assert st.h2c_bytes == 4 * st.page_bytes
-            assert st.c2h_bytes == 2 * st.page_bytes
+            # evicted pages were loaded straight from cold (never dirtied),
+            # so eviction skips both the C2H drain and the cold writeback
+            assert st.c2h_bytes == 0
             cold = st.stats()["cold"]
-            # 4 write_page stores + 2 eviction writebacks + 4 fills loaded
-            assert cold["bytes_stored"] == 6 * st.page_bytes
+            # 4 write_page stores only; 4 fills loaded
+            assert cold["bytes_stored"] == 4 * st.page_bytes
             assert cold["bytes_loaded"] == 4 * st.page_bytes
+            assert st.stats()["clean_evictions"] == 2
+            assert st.stats()["writeback_bytes_skipped"] == \
+                2 * st.page_bytes
 
     def test_oversubscription_rejected(self):
         with TieredStore(8, (2, 2), n_hot_slots=2) as st:
@@ -332,3 +344,331 @@ class TestFarCheckpoint:
             node.pool[e["addr"]] ^= 0xFF       # flip a byte on the node
             with pytest.raises(IOError, match="digest"):
                 cm.restore_far(tree, man, node)
+
+
+class TestMissPipeline:
+    """ISSUE 2: doorbell-batched reads, dirty residency, prefetch overlap."""
+
+    def test_flush_is_conditional_on_outstanding_wrs(self):
+        with MemoryNode("mp0", 1 << 16) as node:
+            qp = QueuePair(node, doorbell_batch=4)
+            assert qp.outstanding_wrs == 0
+            qp.flush()                      # no-op: nothing rung, no wait
+            assert qp.doorbells == 0
+            qp.post_write(MemoryRegion(np.ones(64, np.uint8)), 0,
+                          node.alloc(64), 64)
+            assert qp.outstanding_wrs == 1
+            qp.flush()
+            assert qp.doorbells == 1 and qp.outstanding_wrs == 0
+
+    def test_remote_load_fences_only_when_writes_pending(self):
+        be = RemoteBackend(n_pages=4, page_bytes=64, n_nodes=1,
+                           doorbell_batch=4)
+        try:
+            be.store(0, np.full(64, 7, np.uint8))
+            be.flush()
+            # idle QP: the load's fence is a fast-path no-op — the only
+            # doorbell rung is the read's own
+            d0 = be.qp.doorbells
+            assert be.load(0)[0] == 7
+            assert be.qp.doorbells == d0 + 1
+            be.store(1, np.full(64, 9, np.uint8))   # pending unsignaled WR
+            assert be.qp.outstanding_wrs == 1
+            d1 = be.qp.doorbells
+            assert be.load(1)[0] == 9               # fenced: write rung too
+            assert be.qp.doorbells == d1 + 2
+        finally:
+            be.close()
+
+    def test_conditional_fence_still_surfaces_deferred_errors(self):
+        """A failed unsignaled doorbell that drained while nothing was
+        outstanding must still raise on the next fence (flush fast path)
+        and on batched-load joins — not silently return stale bytes."""
+        be = RemoteBackend(n_pages=4, page_bytes=64, n_nodes=1,
+                           doorbell_batch=4)
+        try:
+            be.store(0, np.full(64, 7, np.uint8))
+            be.flush()
+            boom = IOError("node-side write failure")
+            be.qp._async_error = boom       # a drained doorbell's error
+            with pytest.raises(IOError, match="node-side"):
+                be.load(0)
+            assert be.load(0)[0] == 7       # raised once, then recovered
+            be.qp._async_error = boom
+            with pytest.raises(IOError, match="node-side"):
+                be.load_many_async([0]).wait()
+        finally:
+            be.close()
+
+    def test_batched_reads_ordered_after_interleaved_writes(self):
+        """Doorbell-batched reads posted on the same QP observe writes
+        posted earlier — including unsignaled writes still pending in the
+        send queue — without an explicit flush."""
+        be = RemoteBackend(n_pages=8, page_bytes=64, n_nodes=1,
+                           doorbell_batch=4)
+        try:
+            for p in range(8):
+                be.store(p, np.full(64, p, np.uint8))
+            be.flush()
+            # re-store two pages; the writes stay pending (unsignaled, the
+            # doorbell has not been rung), then batch-read them back
+            be.store(2, np.full(64, 200, np.uint8))
+            be.store(5, np.full(64, 205, np.uint8))
+            out = be.load_many([2, 5, 7])
+            assert out[0][0] == 200 and out[1][0] == 205 and out[2][0] == 7
+        finally:
+            be.close()
+
+    def test_load_many_spans_address_map_node_boundary(self):
+        # 5 pages x 768 B striped over 2 nodes (1920 B each): page 2
+        # occupies [1536, 2304) and straddles the boundary at 1920
+        be = RemoteBackend(n_pages=5, page_bytes=768, n_nodes=2,
+                           doorbell_batch=4)
+        try:
+            vals = {p: np.random.default_rng(p).integers(
+                0, 256, 768, dtype=np.uint8) for p in range(5)}
+            be.store_many(list(vals), list(vals.values()))
+            out = be.load_many(list(vals))
+            for i, p in enumerate(vals):
+                np.testing.assert_array_equal(out[i], vals[p])
+            assert all(n.bytes_out > 0 for n in be.amap.nodes)
+        finally:
+            be.close()
+
+    def test_node_coalesces_batched_reads_into_one_hop(self):
+        be = RemoteBackend(n_pages=8, page_bytes=256, n_nodes=1,
+                           doorbell_batch=8)
+        try:
+            be.store_many(range(8), [np.full(256, p, np.uint8)
+                                     for p in range(8)])
+            be.flush()                      # drain the write doorbell first
+            hops0 = be.amap.nodes[0].staged_hops
+            be.load_many(list(range(8)))
+            node = be.amap.nodes[0]
+            assert node.staged_hops == hops0 + 1    # 8 reads, one hop
+            assert node.coalesced_runs >= 1
+        finally:
+            be.close()
+
+    def test_store_many_async_wait_fences_writes(self):
+        be = RemoteBackend(n_pages=6, page_bytes=128, n_nodes=1,
+                           doorbell_batch=4)
+        try:
+            vals = [np.full(128, 10 + p, np.uint8) for p in range(6)]
+            io = be.store_many_async(range(6), vals)
+            io.wait()
+            assert be.qp.outstanding_wrs == 0
+            assert be.amap.nodes[0].bytes_in >= 6 * 128
+        finally:
+            be.close()
+
+    @pytest.mark.parametrize("kind", ["local", "remote"])
+    def test_prefetch_then_ensure_bit_identical(self, kind):
+        rng = np.random.default_rng(4)
+        data = [rng.standard_normal((4, 8)).astype(np.float32)
+                for _ in range(10)]
+        page_bytes = 4 * 8 * 4
+
+        def build():
+            st = TieredStore(10, (4, 8), dtype="float32", n_hot_slots=4,
+                             backend=make_backend(kind, 10, page_bytes))
+            for p, v in enumerate(data):
+                st.write_page(p, v)
+            return st
+        with build() as sync, build() as pre:
+            want = sync.ensure([0, 1, 2, 3])
+            pre.prefetch([0, 1, 2, 3])      # fetch starts in the background
+            got = pre.ensure([0, 1, 2, 3])
+            for p in range(4):
+                np.testing.assert_array_equal(np.asarray(got[p]),
+                                              np.asarray(want[p]))
+                np.testing.assert_array_equal(np.asarray(got[p]), data[p])
+            assert pre.stats()["prefetch_hits"] == 4
+            assert sync.stats()["prefetch_hits"] == 0
+
+    def test_ensure_never_evicts_page_requested_in_same_call(self):
+        with TieredStore(4, (8,), dtype="float32", n_hot_slots=2) as st:
+            for p in range(4):
+                st.write_page(p, np.full(8, p, np.float32))
+            st.ensure([0])
+            st.ensure([1])                  # page 0 is now the LRU slot
+            res = st.ensure([0, 2])         # must evict 1, never 0
+            assert set(st.resident_pages) == {0, 2}
+            assert float(np.asarray(res[0])[0]) == 0.0
+
+    def test_ensure_failure_rolls_back_unmapped_residency(self):
+        """If a group's fetch fails mid-pipeline, no page of that ensure
+        may be left 'resident' pointing at a slot whose device array never
+        landed — and the store must keep working afterwards."""
+        from repro.rmem.backend import PendingIO
+
+        class FlakyBackend(LocalHostBackend):
+            doorbell_batch = 2              # forces two-page miss groups
+
+            def load_many_async(self, pages):
+                pages = list(pages)
+                if 2 in pages:
+                    def boom(_t):
+                        raise IOError("fetch failed")
+                    return PendingIO(boom)
+                return super().load_many_async(pages)
+
+        be = FlakyBackend(6, 32)
+        with TieredStore(6, (8,), dtype="float32", n_hot_slots=4,
+                         backend=be) as st:
+            for p in range(6):
+                st.write_page(p, np.full(8, p, np.float32))
+            with pytest.raises(IOError, match="fetch failed"):
+                st.ensure([0, 1, 2, 3])     # group [2, 3] fails
+            assert st.resident_pages == []  # nothing half-mapped
+            res = st.ensure([0, 1])         # clean recovery
+            assert float(np.asarray(res[0])[0]) == 0.0
+            assert float(np.asarray(res[1])[0]) == 1.0
+
+    def test_write_page_invalidates_stale_prefetch(self):
+        with TieredStore(6, (8,), dtype="float32", n_hot_slots=2) as st:
+            st.write_page(0, np.zeros(8, np.float32))
+            st.prefetch([0])
+            st.write_page(0, np.full(8, 3.0, np.float32))  # newer bytes
+            res = st.ensure([0])
+            assert float(np.asarray(res[0])[0]) == 3.0
+
+    def test_write_page_fences_inflight_remote_prefetch(self):
+        """write_page on a page whose prefetch READ is still executing
+        must fence that read first — otherwise the read scatters stale
+        bytes over the new value in the shared staging row and the store
+        pushes them cold."""
+        node = MemoryNode("racer", (1 << 21) + (1 << 14))
+        be = RemoteBackend(n_pages=2, page_bytes=4096, nodes=[node],
+                           doorbell_batch=1)
+        with TieredStore(2, (4096,), dtype="uint8", n_hot_slots=1,
+                         backend=be) as st:
+            st.write_page(0, np.full(4096, 1, np.uint8))
+            be.flush()
+            # clog the node's FIFO with busy-work so the prefetch read
+            # stays in flight across the write_page call
+            side = QueuePair(node)
+            buf = MemoryRegion(np.zeros(1 << 20, np.uint8))
+            addr = node.alloc(1 << 20)
+            for _ in range(4):
+                side.post_write(buf, 0, addr, 1 << 20)
+                side.ring_doorbell()
+            st.prefetch([0])                # read queued behind the clog
+            st.write_page(0, np.full(4096, 9, np.uint8))
+            res = st.ensure([0])
+            assert int(np.asarray(res[0])[0]) == 9
+            assert int(be.load(0)[0]) == 9  # cold copy holds the new bytes
+            side.flush()
+        node.close()
+
+    def test_batched_paths_drain_completion_queue(self):
+        be = RemoteBackend(n_pages=8, page_bytes=64, n_nodes=1,
+                           doorbell_batch=4)
+        try:
+            vals = [np.full(64, p, np.uint8) for p in range(8)]
+            for _ in range(3):
+                be.store_many_async(range(8), vals).wait()
+                be.load_many(list(range(8)))
+            assert len(be.cq._ring) == 0    # no unbounded completion pile
+        finally:
+            be.close()
+
+    def test_collector_error_not_redelivered_to_next_fence(self):
+        with MemoryNode("mp9", 1024) as node:
+            qp = QueuePair(node, doorbell_batch=2)
+            mr = MemoryRegion(np.zeros(512, np.uint8))
+            with qp.collect_doorbells() as coll:
+                qp.post_read(mr, 0, 900, 512)   # past the pool end
+                qp.ring_doorbell()
+            with pytest.raises(IndexError, match="out of pool"):
+                coll.wait()
+            qp.flush()      # already reported: must not re-raise
+
+    def test_dirty_eviction_writes_back_clean_skips(self):
+        with TieredStore(6, (8,), dtype="float32", n_hot_slots=2) as st:
+            for p in range(6):
+                st.write_page(p, np.full(8, p, np.float32))
+            st.ensure([0, 1])
+            st.update_page(0, np.full(8, 50.0, np.float32))
+            assert st.is_dirty(0) and not st.is_dirty(1)
+            stored0 = st.backend.stats()["bytes_stored"]
+            st.ensure([2, 3])               # evicts 0 (dirty) and 1 (clean)
+            s = st.stats()
+            assert s["evictions"] == 2
+            assert s["clean_evictions"] == 1 and s["dirty_evictions"] == 1
+            assert s["writeback_bytes_skipped"] == st.page_bytes
+            # only the dirty page moved cold bytes
+            assert st.backend.stats()["bytes_stored"] - stored0 == \
+                st.page_bytes
+            res = st.ensure([0])            # dirty data persisted
+            assert float(np.asarray(res[0])[0]) == 50.0
+
+    def test_release_writes_back_only_dirty_pages(self):
+        with TieredStore(4, (8,), dtype="float32", n_hot_slots=2) as st:
+            for p in range(4):
+                st.write_page(p, np.full(8, p, np.float32))
+            st.ensure([0, 1])
+            st.update_page(0, np.full(8, 9.0, np.float32))
+            stored0 = st.backend.stats()["bytes_stored"]
+            st.release(0)                   # dirty: drained cold
+            st.release(1)                   # clean: moves zero bytes
+            assert st.backend.stats()["bytes_stored"] - stored0 == \
+                st.page_bytes
+            res = st.ensure([0, 1])
+            assert float(np.asarray(res[0])[0]) == 9.0
+            assert float(np.asarray(res[1])[0]) == 1.0
+
+    def test_release_discard_drops_dirty_data(self):
+        with TieredStore(4, (8,), dtype="float32", n_hot_slots=2) as st:
+            for p in range(4):
+                st.write_page(p, np.full(8, p, np.float32))
+            st.ensure([0])
+            st.update_page(0, np.full(8, 9.0, np.float32))
+            st.release(0, writeback=False)  # explicit discard
+            res = st.ensure([0])
+            assert float(np.asarray(res[0])[0]) == 0.0
+
+    @pytest.mark.parametrize("kind", ["local", "remote"])
+    def test_batched_ensure_matches_serial_ensure(self, kind):
+        rng = np.random.default_rng(5)
+        data = [rng.standard_normal((2, 4)).astype(np.float32)
+                for _ in range(8)]
+        page_bytes = 2 * 4 * 4
+
+        def build():
+            kw = dict(n_nodes=2, doorbell_batch=4) if kind == "remote" \
+                else {}
+            return TieredStore(8, (2, 4), dtype="float32", n_hot_slots=6,
+                               backend=make_backend(kind, 8, page_bytes,
+                                                    **kw))
+        with build() as a, build() as b:
+            for p, v in enumerate(data):
+                a.write_page(p, v)
+                b.write_page(p, v)
+            got = a.ensure([0, 1, 2, 3, 4, 5])      # one batched pipeline
+            for p in range(6):
+                want = b.ensure([p])[p]             # serial per-page
+                np.testing.assert_array_equal(np.asarray(got[p]),
+                                              np.asarray(want))
+
+
+class TestServeRejection:
+    def test_overlong_prompt_rejected_engine_keeps_serving(self):
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.launch.serve import Request, ServeEngine
+        from repro.models import transformer as T
+        cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+        params = T.tree_init(T.param_defs(cfg), cfg,
+                             jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, batch_slots=2, max_len=32)
+        rng = np.random.default_rng(0)
+        eng.submit(Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab, 40).astype(np.int32), max_new=4))   # too long
+        eng.submit(Request(rid=1, prompt=rng.integers(
+            0, cfg.vocab, 8).astype(np.int32), max_new=4))
+        eng.run_until_drained()
+        failed = [r for r in eng.done if r.failed is not None]
+        served = [r for r in eng.done if r.failed is None]
+        assert len(failed) == 1 and failed[0].rid == 0
+        assert "max_len" in failed[0].failed
+        assert len(served) == 1 and len(served[0].out_tokens) == 4
