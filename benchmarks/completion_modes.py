@@ -39,10 +39,10 @@ def run(quick: bool = False) -> None:
          f"{size/t_intr/1e9:.2f}GB/s overhead="
          f"{(t_intr/t_poll-1)*100:.1f}%")
 
-    for flavor in ("xdma", "qdma"):
-        with MemoryEngine(n_channels=2, flavor=flavor) as eng:
+    for path in ("xdma", "qdma"):
+        with MemoryEngine(n_channels=2, path=path) as eng:
             t = time_call(lambda: eng.write(host).wait(), repeats=3)
-            emit(f"fig14_{flavor}_managed_h2c", t * 1e6,
+            emit(f"fig14_{path}_managed_h2c", t * 1e6,
                  f"{size/t/1e9:.2f}GB/s")
 
 

@@ -10,12 +10,11 @@ from __future__ import annotations
 import threading
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core.analytical import paper_pcie_ddr4
-from repro.core.channels import ChannelPool, Direction
+from repro.core.channels import ChannelPool
 
 SIZE = 1 << 22
 

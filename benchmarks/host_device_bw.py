@@ -12,8 +12,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import cpu_memcpy_ceiling_gbps, emit, time_call
-from repro.core.analytical import (bandwidth_gbps, paper_pcie_ddr4,
-                                   project, tpu_host_path)
+from repro.core.analytical import (paper_pcie_ddr4, project,
+                                   tpu_host_path)
 from repro.core.channels import ChannelPool, Direction
 
 SIZES = [1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24]   # 64KB..16MB

@@ -12,10 +12,11 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.configs import get_config, reduce_for_smoke
-from repro.core.offload import HostOffloadedOptimizer, KVPager
+from repro.core.offload import HostOffloadedOptimizer
 from repro.models import lm
 from repro.models import transformer as T
 from repro.optim.adamw import AdamW
+from repro.rmem.store import TieredStore
 
 
 def run(quick: bool = False) -> None:
@@ -52,7 +53,8 @@ def run(quick: bool = False) -> None:
          f"overhead_vs_device={(t_off/t_dev-1)*100:.0f}% "
          f"host_bytes={ho.host_bytes()>>20}MB")
 
-    pager = KVPager(n_pages=32, page_shape=(64, 128), n_hbm_slots=8)
+    pager = TieredStore(n_pages=32, page_shape=(64, 128), n_hot_slots=8,
+                        path="xdma")
     for p in range(32):
         pager.write_page(p, np.zeros((64, 128), np.float32))
     rr = [0]

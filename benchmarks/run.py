@@ -37,10 +37,15 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default="",
                     help="miss-pipeline metrics JSON path (farmem module); "
                          "defaults to BENCH_miss_pipeline.json with --smoke")
+    ap.add_argument("--select-json", default="",
+                    help="path-selection sweep JSON path (farmem module); "
+                         "defaults to BENCH_path_select.json with --smoke")
     args = ap.parse_args(argv)
     quick = args.quick or args.smoke
     json_out = args.json or ("BENCH_miss_pipeline.json" if args.smoke
                              else "")
+    select_out = args.select_json or ("BENCH_path_select.json"
+                                      if args.smoke else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -49,8 +54,8 @@ def main(argv=None) -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            if json_out and mod is far_memory:
-                mod.run(quick=quick, out=json_out)
+            if (json_out or select_out) and mod is far_memory:
+                mod.run(quick=quick, out=json_out, select_out=select_out)
             else:
                 mod.run(quick=quick)
         except Exception:

@@ -3,7 +3,8 @@
 1. multi-channel host<->device bandwidth sweep (XDMA model, Figs 9/10)
 2. QDMA-style function queues sharing the channel pool
 3. host-offloaded AdamW (moments stream through the engine every step)
-4. KV pager: long-context cache paging between HBM slots and host RAM
+4. tiered KV store: long-context cache paging between HBM slots and an
+   access path picked per request by the model-driven selector
 
     PYTHONPATH=src python examples/offload_demo.py
 """
@@ -18,9 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ChannelPool, Direction, HostOffloadedOptimizer,
-                        KVPager, MemoryEngine)
-from repro.core.analytical import (bandwidth_gbps, paper_pcie_ddr4, project,
-                                   tpu_host_path)
+                        MemoryEngine, TieredStore)
+from repro.core.analytical import bandwidth_gbps, paper_pcie_ddr4
 from repro.optim.adamw import AdamW
 
 
@@ -55,9 +55,9 @@ def offload_optimizer():
 
 
 def kv_paging():
-    print("== KV pager (long-context serving) ==")
-    pager = KVPager(n_pages=64, page_shape=(2, 512, 2, 64),
-                    n_hbm_slots=8)
+    print("== tiered KV store over the auto access path ==")
+    pager = TieredStore(n_pages=64, page_shape=(2, 512, 2, 64),
+                        n_hot_slots=8, path="auto")
     rng = np.random.default_rng(0)
     for p in range(64):
         pager.write_page(p, rng.standard_normal((2, 512, 2, 64)))
@@ -65,9 +65,10 @@ def kv_paging():
     for window in range(0, 56, 8):      # sliding attention window walk
         pager.ensure(list(range(window, window + 8)))
     dt = time.perf_counter() - t0
+    placement = pager.stats()["cold"].get("placement", {})
     print(f"  paged {pager.h2c_bytes>>20} MB H2C / "
           f"{pager.c2h_bytes>>20} MB C2H in {dt*1e3:.0f} ms "
-          f"(page={pager.page_bytes>>10} KB)")
+          f"(page={pager.page_bytes>>10} KB, placement={placement})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.access: one capability-typed memory-access API (DESIGN.md §5).
+
+The unification layer over the repo's three access stacks — XDMA
+channels, QDMA descriptor queues, and RDMA-style verbs — plus the
+model-driven selector that picks among them per request, which is the
+paper's actual contribution ("guide the selection of an appropriate
+memory access design").
+
+Public API:
+    MemoryPath, PathCapabilities            (the protocol + descriptor)
+    XdmaPath, QdmaPath, VerbsPath           (adapters over the stacks)
+    PathRegistry, DEFAULT_REGISTRY, create_path
+    PathSelector, PathDecision              (policy + decision trace)
+"""
+from repro.access.adapters import QdmaPath, VerbsPath, XdmaPath
+from repro.access.path import MemoryPath, PathCapabilities
+from repro.access.registry import (DEFAULT_REGISTRY, PathRegistry,
+                                   create_path)
+from repro.access.selector import PathDecision, PathSelector
+
+__all__ = [
+    "MemoryPath", "PathCapabilities",
+    "XdmaPath", "QdmaPath", "VerbsPath",
+    "PathRegistry", "DEFAULT_REGISTRY", "create_path",
+    "PathSelector", "PathDecision",
+]

@@ -1,0 +1,95 @@
+"""Path registry: names -> ``MemoryPath`` factories.
+
+One construction surface for every access mechanism, so callers (CLI
+flags, ``MemoryEngine``, ``TieredStore``, benches) spell a path as a
+string and get a fully wired adapter — or, for ``"auto"``, a
+``PathSelector`` over all of them.  Factories tolerate the union of all
+paths' keyword arguments: irrelevant ones are filtered by signature, so
+``create_path("xdma", n_nodes=2)`` simply drops ``n_nodes`` instead of
+forcing every call site to know each adapter's spelling.
+
+Registered by default:
+    xdma   — static DMA channels over host DRAM
+    qdma   — descriptor queues over host DRAM
+    verbs  — one-sided verbs onto far-memory nodes
+    auto   — ``PathSelector`` over the above (page-backed members when
+             geometry is given, stage-only xdma+qdma members otherwise)
+
+Custom paths register with ``DEFAULT_REGISTRY.register(name, factory)``
+— the extension point the roadmap's multi-backend work builds on.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict, Sequence
+
+from repro.access.adapters import QdmaPath, VerbsPath, XdmaPath
+from repro.access.path import MemoryPath
+from repro.access.selector import PathSelector
+
+
+class PathRegistry:
+    """Named ``MemoryPath`` factories with signature-filtered kwargs."""
+
+    def __init__(self):
+        self._factories: Dict[str, Callable[..., MemoryPath]] = {}
+
+    def register(self, name: str, factory: Callable[..., MemoryPath],
+                 overwrite: bool = False) -> None:
+        if name in self._factories and not overwrite:
+            raise ValueError(f"path {name!r} already registered")
+        self._factories[name] = factory
+
+    def names(self) -> list:
+        return sorted(self._factories)
+
+    def create(self, name: str, **kw) -> MemoryPath:
+        if name not in self._factories:
+            raise ValueError(f"unknown access path {name!r}; "
+                             f"registered: {self.names()}")
+        factory = self._factories[name]
+        params = inspect.signature(factory).parameters
+        if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()):
+            kw = {k: v for k, v in kw.items() if k in params}
+        return factory(**kw)
+
+
+DEFAULT_REGISTRY = PathRegistry()
+DEFAULT_REGISTRY.register("xdma", XdmaPath)
+DEFAULT_REGISTRY.register("qdma", QdmaPath)
+DEFAULT_REGISTRY.register("verbs", VerbsPath)
+
+
+def _auto_factory(n_pages: int = 0, page_bytes: int = 0,
+                  members: Sequence[str] = None,
+                  occupancy_penalty: float = 2.0,
+                  trace_limit: int = 4096, **kw) -> PathSelector:
+    """Selector over member paths sharing one page geometry.
+
+    Stage-only (``n_pages=0``) selectors default to the two DMA members
+    — a verbs path with no far memory behind it has nothing distinct to
+    offer the host<->device leg.
+    """
+    if members is None:
+        members = ("xdma", "qdma", "verbs") if n_pages else \
+            ("xdma", "qdma")
+    paths = []
+    try:
+        for m in members:
+            paths.append(DEFAULT_REGISTRY.create(
+                m, n_pages=n_pages, page_bytes=page_bytes, **kw))
+    except BaseException:
+        for p in paths:
+            p.close()
+        raise
+    return PathSelector(paths, occupancy_penalty=occupancy_penalty,
+                        trace_limit=trace_limit)
+
+
+DEFAULT_REGISTRY.register("auto", _auto_factory)
+
+
+def create_path(name: str, **kw) -> MemoryPath:
+    """Construct a registered path; see ``PathRegistry.create``."""
+    return DEFAULT_REGISTRY.create(name, **kw)

@@ -56,10 +56,15 @@ def _leaf_name(path) -> str:
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
-                 engine: Optional[MemoryEngine] = None, digest: bool = True):
+                 engine: Optional[MemoryEngine] = None, digest: bool = True,
+                 path="auto"):
+        """``path`` names the access path the C2H snapshot drain rides
+        (DESIGN.md §5) — the default stage-only ``auto`` selector rides
+        xdma while idle and spills to the qdma queues under occupancy;
+        ignored when an ``engine`` is handed in."""
         self.dir = directory
         self.keep = keep
-        self.engine = engine or MemoryEngine(n_channels=2)
+        self.engine = engine or MemoryEngine(n_channels=2, path=path)
         self.digest = digest
         os.makedirs(directory, exist_ok=True)
         self._save_thread: Optional[threading.Thread] = None

@@ -9,9 +9,14 @@ Public API:
 
 The far-memory tier (RDMA-style verbs, memory nodes, remote backends)
 lives in ``repro.rmem`` (DESIGN.md §4); ``TieredStore``/``KVPager`` accept
-its backends to page against it.  The offload names resolve lazily so the
-core<->rmem dependency stays one-way at import time (rmem modules import
-core submodules; only the offload paths pull rmem back in).
+its backends to page against it.  The unified access-path API — one
+``MemoryPath`` protocol over XDMA/QDMA/verbs plus the model-driven
+``PathSelector`` — lives in ``repro.access`` (DESIGN.md §5);
+``MemoryEngine`` is now a thin facade over it (``path="xdma"|"qdma"|
+"auto"``; the ``flavor=`` spelling is deprecated).  The offload names
+resolve lazily so the core<->rmem dependency stays one-way at import time
+(rmem modules import core submodules; only the offload paths pull rmem
+back in).
 """
 import importlib
 

@@ -25,7 +25,7 @@ import dataclasses
 from dataclasses import dataclass
 
 from repro.core.channels import Direction
-from repro.core.tiers import Tier, get_part
+from repro.core.tiers import get_part
 
 
 @dataclass(frozen=True)
@@ -80,6 +80,21 @@ def tpu_ici_path() -> PathModel:
     """Chip<->chip ICI (the 'RDMA' analogue — easy API, distinct link)."""
     return PathModel(link_gbps=get_part("tpu_v5e")["ici"].bw_gbps,
                      t0_us=2.0, single_eff=0.85, max_eff=0.95, c2h_boost=1.0)
+
+
+def qdma_host_path() -> PathModel:
+    """Host<->HBM through QDMA-style descriptor queues (PG302 analogue).
+
+    Same physical link as :func:`tpu_host_path`, but transfers flow
+    through per-function descriptor rings drained by a scheduler — a
+    higher fixed setup per op (queue scheduling round + ring doorbell)
+    that the ring *coalesces* across batched submissions.  The selector
+    models this as a larger ``t0`` amortized over the batch: QDMA loses
+    to XDMA on isolated transfers and wins once submissions are deep
+    enough to share the scheduling cost (the paper's §4.1.2 contrast).
+    """
+    host = tpu_host_path()
+    return dataclasses.replace(host, t0_us=18.0)
 
 
 def far_memory_path() -> PathModel:

@@ -1,62 +1,82 @@
-"""Unified NMA engine facade.
+"""Unified NMA engine facade — now a thin veneer over ``repro.access``.
 
-``MemoryEngine`` wires the XDMA-style ``ChannelPool`` and the QDMA-style
-``QueueEngine`` behind one API, mirroring the paper's two DMA IPs behind a
-common host driver.  Subsystems pick an engine *flavor* and a completion
-mode; everything else (chunking, interleaving, completion) is shared.
+``MemoryEngine`` keeps the established host<->device array surface
+(``write``/``read``/pytree helpers) but delegates every transfer to a
+``MemoryPath`` from the access registry: the XDMA channel pool, the QDMA
+queue engine, or a model-driven ``PathSelector`` (``path="auto"``) that
+picks per transfer.
 
-    eng = MemoryEngine(n_channels=4, flavor="xdma")
+    eng = MemoryEngine(n_channels=4, path="xdma")
     t = eng.write(host_array)            # H2C
     dev = t.wait()
     t = eng.read(dev_array)              # C2H
     host = t.wait()
 
+The old ``flavor="xdma"|"qdma"`` spelling still works but emits a
+``DeprecationWarning`` — flavors were the pre-`repro.access` way of
+naming a path.  Pass a constructed ``MemoryPath`` (or ``PathSelector``)
+as ``path=`` to share one path between the engine and other subsystems;
+the engine only closes paths it created.
+
 Pytree helpers move whole param/opt-state trees (offload, checkpoint).
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, List, Optional, Sequence
+import warnings
+from typing import Any, Callable, Optional
 
 import jax
-import numpy as np
 
-from repro.core.channels import (ChannelPool, CompletionMode, Direction,
-                                 Transfer)
-from repro.core.queues import QueueEngine
+from repro.core.channels import CompletionMode, Transfer
 
 
 class MemoryEngine:
-    def __init__(self, n_channels: int = 4, flavor: str = "xdma",
+    def __init__(self, n_channels: int = 4, path="xdma",
                  device=None, chunk_bytes: int = 1 << 22,
-                 mode: CompletionMode = CompletionMode.POLLED):
-        if flavor not in ("xdma", "qdma"):
-            raise ValueError(flavor)
-        self.flavor = flavor
+                 mode: CompletionMode = CompletionMode.POLLED,
+                 flavor: Optional[str] = None):
+        if flavor is not None:
+            warnings.warn(
+                "MemoryEngine(flavor=...) is deprecated; use "
+                "MemoryEngine(path=...) — same names, plus 'verbs' and "
+                "'auto' from the access registry", DeprecationWarning,
+                stacklevel=2)
+            path = flavor
+        if isinstance(path, str):
+            # deferred: repro.access pulls core submodules at import time,
+            # so importing it at this module's top would cycle through
+            # repro.core.__init__
+            from repro.access.registry import create_path
+            self.path = create_path(path, n_channels=n_channels,
+                                    device=device, chunk_bytes=chunk_bytes,
+                                    mode=mode)
+            self._owns_path = True
+        else:
+            self.path = path
+            self._owns_path = False
+        self.flavor = self.path.name        # established introspection name
         self.mode = mode
-        self.pool = ChannelPool(n_channels, device=device,
-                                chunk_bytes=chunk_bytes)
-        self.qdma: Optional[QueueEngine] = None
-        if flavor == "qdma":
-            self.qdma = QueueEngine(pool=self.pool)
-            self.qdma.create_queue("default", depth=256)
+        self._closed = False
+
+    # the underlying mechanism's handles, for callers that tune them
+    @property
+    def pool(self):
+        return getattr(self.path, "pool", None)
+
+    @property
+    def qdma(self):
+        return getattr(self.path, "qdma", None)
 
     # -- scalar (array) ops -------------------------------------------------
     def write(self, host_arr, on_complete: Optional[Callable] = None,
               qname: str = "default") -> Transfer:
-        return self._submit(host_arr, Direction.H2C, on_complete, qname)
+        return self.path.stage_h2c(host_arr, on_complete=on_complete,
+                                   qname=qname)
 
     def read(self, dev_arr, on_complete: Optional[Callable] = None,
              qname: str = "default") -> Transfer:
-        return self._submit(dev_arr, Direction.C2H, on_complete, qname)
-
-    def _submit(self, payload, direction, on_complete, qname) -> Transfer:
-        if self.qdma is not None:
-            item = self.qdma.submit(qname, payload, direction)
-            item.assigned.wait()  # scheduler attaches the Transfer
-            return item.transfer
-        return self.pool.submit(payload, direction, mode=self.mode,
-                                on_complete=on_complete)
+        return self.path.stage_c2h(dev_arr, on_complete=on_complete,
+                                   qname=qname)
 
     # -- pytree ops -----------------------------------------------------------
     def write_tree(self, host_tree) -> Any:
@@ -79,12 +99,18 @@ class MemoryEngine:
         return join
 
     def stats(self) -> dict:
-        return {c.name: c.bytes_moved for c in self.pool.channels}
+        """Unified `{path, bytes_moved, ops, projected_s, ...}` schema
+        (mechanism detail — channels, queues, members — nests below)."""
+        return self.path.stats()
 
     def close(self) -> None:
-        if self.qdma is not None:
-            self.qdma.close()  # closes the shared pool? no — owns=False
-        self.pool.close()
+        """Idempotent; only closes a path this engine constructed (shared
+        paths — handed in by the caller — have exactly one owner)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._owns_path:
+            self.path.close()
 
     def __enter__(self):
         return self

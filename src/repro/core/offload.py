@@ -21,6 +21,7 @@ so clean evictions move zero cold bytes.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, List, Optional, Tuple
 
 import jax
@@ -32,12 +33,22 @@ from repro.rmem.store import TieredStore
 
 
 class HostOffloadedOptimizer:
-    """Wraps ``repro.optim.adamw.AdamW`` with host-resident state."""
+    """Wraps ``repro.optim.adamw.AdamW`` with host-resident state.
+
+    State streams through an access path (DESIGN.md §5): ``path`` names
+    it ("xdma"/"qdma"/"auto"/...) or passes a constructed
+    ``MemoryPath``/``PathSelector``.  The default ``auto`` is a
+    stage-only selector over the two DMA members: idle it scores xdma
+    best at every size, but once the streamed leaves saturate xdma's
+    in-flight budget the occupancy term reroutes overflow through the
+    qdma descriptor queues instead of queueing behind the stall.
+    """
 
     def __init__(self, opt, params, engine: Optional[MemoryEngine] = None,
-                 n_channels: int = 4):
+                 n_channels: int = 4, path="auto"):
         self.opt = opt
-        self.engine = engine or MemoryEngine(n_channels=n_channels)
+        self.engine = engine or MemoryEngine(n_channels=n_channels,
+                                             path=path)
         dev_state = opt.init(params)
         # spill initial state to host (C2H)
         self.host_state = self.engine.read_tree(dev_state)
@@ -103,10 +114,15 @@ class KVPager(TieredStore):
     def __init__(self, n_pages: int, page_shape: Tuple[int, ...],
                  dtype="bfloat16", n_hbm_slots: int = 8,
                  engine: Optional[MemoryEngine] = None,
-                 backend: Optional[TierBackend] = None):
+                 backend: Optional[TierBackend] = None, path=None):
+        warnings.warn(
+            "KVPager is deprecated; use repro.rmem.TieredStore (same API, "
+            "n_hot_slots instead of n_hbm_slots) with an access path, "
+            "e.g. TieredStore(..., path='xdma'|'verbs'|'auto')",
+            DeprecationWarning, stacklevel=2)
         super().__init__(n_pages, page_shape, dtype=dtype,
                          n_hot_slots=n_hbm_slots, engine=engine,
-                         backend=backend)
+                         backend=backend, path=path)
 
     @property
     def n_hbm_slots(self) -> int:

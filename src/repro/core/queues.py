@@ -75,9 +75,14 @@ class QueueEngine:
     """Weighted round-robin scheduler over function queues."""
 
     def __init__(self, pool: Optional[ChannelPool] = None,
-                 n_channels: int = 4):
+                 n_channels: int = 4, owns_pool: Optional[bool] = None):
+        """``owns_pool`` makes pool lifetime explicit: the engine closes
+        the pool on ``close()`` iff it owns it.  Default: own a pool we
+        created, never one handed in (shared pools have another owner)."""
         self.pool = pool if pool is not None else ChannelPool(n_channels)
-        self._own_pool = pool is None
+        self.owns_pool = (pool is None) if owns_pool is None else \
+            bool(owns_pool)
+        self._closed = False
         self.queues: Dict[str, FunctionQueue] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -132,9 +137,14 @@ class QueueEngine:
         return item.transfer.result()
 
     def close(self) -> None:
+        """Idempotent: a second close is a no-op (double-close used to
+        re-close a shared pool when ownership was ambiguous)."""
+        if self._closed:
+            return
+        self._closed = True
         self._stop.set()
         self._thread.join(timeout=5)
-        if self._own_pool:
+        if self.owns_pool:
             self.pool.close()
 
     def __enter__(self):

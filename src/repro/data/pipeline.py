@@ -19,8 +19,8 @@ from typing import Dict, Iterator, Optional
 import jax
 import numpy as np
 
-from repro.core.channels import ChannelPool, Direction
-from repro.core.descriptors import SGList, gather, spans_for_packing
+from repro.core.channels import ChannelPool
+from repro.core.descriptors import gather, spans_for_packing
 
 
 class SyntheticCorpus:

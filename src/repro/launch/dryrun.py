@@ -23,10 +23,8 @@ import dataclasses
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.launch.hlo import cost_analysis_dict, total_collective_bytes

@@ -6,9 +6,13 @@ each iteration (continuous batching).  With ``--kv-paging``, each admitted
 slot's prefilled KV cache is paged through a ``TieredStore`` — packed to a
 byte page, spilled to the cold tier, fetched back H2C, and installed from
 the device-resident page — so the cache crosses the paper's memory path
-before serving.  ``--kv-backend`` picks the cold tier: ``local`` (host
-RAM, the XDMA/QDMA pattern) or ``remote`` (far-memory nodes behind
-RDMA-style verbs, DESIGN.md §4).
+before serving.  ``--access-path`` picks the mechanism (DESIGN.md §5):
+``xdma`` (static DMA channels), ``qdma`` (descriptor queues), ``verbs``
+(far-memory nodes behind RDMA-style verbs), or ``auto`` (the
+``PathSelector`` places each page by the analytical models and records a
+decision trace).  Output is bit-exact across all of them.  The old
+``--kv-backend {local,remote}`` spelling is a deprecated alias
+(local->xdma, remote->verbs).
 
 Admission is *prefetch-pipelined* (DESIGN.md §3.3): right after a slot's
 cache is spilled cold, ``TieredStore.prefetch`` starts its asynchronous
@@ -20,7 +24,7 @@ engine keeps serving the rest.
 
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
-                  [--kv-paging --kv-backend remote]
+                  [--kv-paging --access-path auto]
 """
 from __future__ import annotations
 
@@ -28,17 +32,22 @@ import argparse
 import dataclasses
 import queue
 import time
+import warnings
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.access.registry import create_path
+from repro.access.selector import PathSelector
 from repro.configs import ARCHS, get_config, reduce_for_smoke
 from repro.models import lm
 from repro.models import transformer as T
-from repro.rmem.backend import make_backend
 from repro.rmem.store import TieredStore
+
+# deprecated --kv-backend spellings -> access-path names
+_KV_BACKEND_ALIAS = {"local": "xdma", "remote": "verbs"}
 
 
 @dataclasses.dataclass
@@ -54,8 +63,16 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4,
-                 max_len: int = 256, kv_backend: Optional[str] = None,
+                 max_len: int = 256, access_path: Optional[str] = None,
+                 kv_backend: Optional[str] = None,
                  kv_nodes: int = 2, kv_doorbell: int = 4):
+        if kv_backend is not None:
+            warnings.warn(
+                "ServeEngine(kv_backend=...) is deprecated; use "
+                "access_path='xdma'|'qdma'|'verbs'|'auto'",
+                DeprecationWarning, stacklevel=2)
+            if access_path is None:
+                access_path = _KV_BACKEND_ALIAS[kv_backend]
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -71,17 +88,19 @@ class ServeEngine:
         self.cur_tokens = np.zeros((batch_slots, 1), np.int32)
         # KV paging: one page per slot holding the packed prefill cache
         self.pager: Optional[TieredStore] = None
-        if kv_backend is not None:
+        self.access_path = access_path
+        if access_path is not None:
             self._cache_template = T.init_cache(cfg, 1, max_len)
             page_bytes = sum(l.nbytes
                              for l in jax.tree.leaves(self._cache_template))
-            kw = dict(n_nodes=kv_nodes, doorbell_batch=kv_doorbell) \
-                if kv_backend == "remote" else {}
+            # registry factories drop kwargs their path doesn't take
+            apath = create_path(access_path, n_pages=batch_slots,
+                                page_bytes=page_bytes, n_channels=2,
+                                n_nodes=kv_nodes,
+                                doorbell_batch=kv_doorbell)
             self.pager = TieredStore(
                 n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
-                n_hot_slots=batch_slots,
-                backend=make_backend(kv_backend, batch_slots, page_bytes,
-                                     **kw))
+                n_hot_slots=batch_slots, path=apath)
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.time()
@@ -240,21 +259,37 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kv-paging", action="store_true",
                     help="page each slot's prefill KV through a TieredStore")
+    ap.add_argument("--access-path",
+                    choices=["xdma", "qdma", "verbs", "auto"], default=None,
+                    help="memory-access path for KV paging (implies "
+                         "--kv-paging); 'auto' = model-driven PathSelector")
     ap.add_argument("--kv-backend", choices=["local", "remote"],
-                    default="local")
+                    default=None,
+                    help="DEPRECATED alias of --access-path "
+                         "(local->xdma, remote->verbs)")
     ap.add_argument("--kv-nodes", type=int, default=2,
-                    help="memory nodes for --kv-backend remote")
+                    help="memory nodes for the verbs path")
     ap.add_argument("--kv-doorbell", type=int, default=4,
-                    help="doorbell batch depth for --kv-backend remote")
+                    help="doorbell batch depth for the verbs path")
     args = ap.parse_args(argv)
 
+    access = args.access_path
+    if args.kv_backend is not None:
+        warnings.warn("--kv-backend is deprecated; use --access-path "
+                      "{xdma,qdma,verbs,auto}", DeprecationWarning,
+                      stacklevel=2)
+        if access is None:
+            access = _KV_BACKEND_ALIAS[args.kv_backend]
+    paging = args.kv_paging or access is not None
+    if paging and access is None:
+        access = "xdma"                 # the old local default
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
     params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_len=args.max_len,
-                      kv_backend=args.kv_backend if args.kv_paging else None,
+                      access_path=access if paging else None,
                       kv_nodes=args.kv_nodes, kv_doorbell=args.kv_doorbell)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -273,15 +308,27 @@ def main(argv=None) -> dict:
           f"p50 latency {np.median(lat):.2f}s", flush=True)
     result = {"requests": len(served), "tokens": toks, "seconds": dt,
               "tok_per_s": toks / dt, "rejected": len(failed),
+              "access_path": eng.access_path,
               "outputs": {r.rid: list(r.out_tokens) for r in served}}
     if eng.pager is not None:
         kv = eng.pager.stats()
         cold = kv["cold"]
-        print(f"[serve:kv-paging] tier={cold['tier']} "
+        print(f"[serve:kv-paging] path={eng.access_path} "
+              f"tier={cold['tier']} "
               f"stored={cold['bytes_stored']} loaded={cold['bytes_loaded']} "
               f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
               f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
               flush=True)
+        sel = eng.pager.path
+        if isinstance(sel, PathSelector):
+            trace = sel.decisions
+            placed = cold.get("placement", {})
+            print(f"[serve:access-auto] {len(trace)} decisions, "
+                  f"placement={placed}", flush=True)
+            result["path_decisions"] = [
+                {"op": d.op, "nbytes": d.nbytes, "batch": d.batch,
+                 "direction": d.direction, "chosen": d.chosen,
+                 "model_argmin": d.model_argmin} for d in trace]
         result["kv"] = kv
         eng.pager.close()
     return result

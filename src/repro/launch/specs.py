@@ -19,8 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeCfg
 from repro.models import transformer as T
 from repro.optim.adamw import AdamW, for_arch
-from repro.sharding import (SERVE_RULES, TRAIN_RULES, batch_spec,
-                            resolve_spec, tree_shardings)
+from repro.sharding import SERVE_RULES, TRAIN_RULES, tree_shardings
 
 
 def batch_abstract(cfg: ModelConfig, batch: int, seq: int,

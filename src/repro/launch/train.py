@@ -13,12 +13,10 @@ CPU-runnable:  PYTHONPATH=src python -m repro.launch.train \
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCHS, get_config, reduce_for_smoke

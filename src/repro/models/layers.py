@@ -14,7 +14,6 @@ Attention comes in three compute paths:
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Tuple
@@ -22,7 +21,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import AttentionCfg, ModelConfig
+from repro.configs.base import ModelConfig
 
 
 @dataclass(frozen=True)

@@ -18,8 +18,6 @@ divisibility-aware resolver yields per-expert FSDP+TP (dense TP experts).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -13,7 +13,7 @@ blocking the Pallas path uses on TPU.  Decode carries (S, last_x) per layer.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ layer's FLOPs (XLA counts a while-loop body once — see DESIGN.md §6).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

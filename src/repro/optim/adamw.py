@@ -9,9 +9,8 @@ for free).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

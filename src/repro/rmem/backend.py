@@ -28,7 +28,7 @@ so a miss set of N pages costs one setup, not N.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, List, Optional, Protocol, Sequence, \
+from typing import Any, Callable, Optional, Protocol, Sequence, \
     runtime_checkable
 
 import numpy as np
@@ -121,6 +121,7 @@ class _AccountingMixin:
     store_batches: int = 0      # amortized operations (1 per batched call)
     load_batches: int = 0
     seconds_busy: float = 0.0
+    projected_s: float = 0.0    # accumulated target-link projection
 
     def _account(self, nbytes: int, dt: float, is_store: bool,
                  n_ops: int = 1) -> None:
@@ -135,6 +136,11 @@ class _AccountingMixin:
             self.load_ops += n_ops
             self.load_batches += 1
         self.seconds_busy += dt
+        # projection accrues per call: n_ops work requests of ~equal size
+        # with the per-op setup amortized across the batch
+        direction = Direction.H2C if is_store else Direction.C2H
+        self.projected_s += self.projected_seconds(
+            max(nbytes // n_ops, 1), n_ops, direction) * n_ops
 
     def projected_seconds(self, nbytes: int, batch: int = 1,
                           direction: Direction = Direction.C2H) -> float:
@@ -144,7 +150,14 @@ class _AccountingMixin:
         return nbytes / (bw * 1e9)
 
     def _base_stats(self) -> dict:
-        return {"tier": self.name,
+        # one nested schema shared with repro.access paths: the unified
+        # {path, bytes_moved, ops, projected_s} keys first, then the
+        # per-tier counters the benches/selector drill into
+        return {"path": self.name,
+                "bytes_moved": self.bytes_stored + self.bytes_loaded,
+                "ops": self.store_ops + self.load_ops,
+                "projected_s": self.projected_s,
+                "tier": self.name,
                 "bytes_stored": self.bytes_stored,
                 "bytes_loaded": self.bytes_loaded,
                 "store_ops": self.store_ops,

@@ -8,6 +8,12 @@ flows through the NMA ``MemoryEngine`` (H2C/C2H), so with a remote backend
 a page miss is the paper's full two-hop path: node --verbs--> host staging
 --H2C--> HBM.
 
+Since the access-path unification (DESIGN.md §5) the cold tier is named
+through ``repro.access``: ``TieredStore(..., path="xdma"|"qdma"|"verbs"|
+"auto")`` builds the adapter (or a ``PathSelector`` for ``auto``) and
+routes *both* hops — cold page ops and hot-leg staging — through it; a
+constructed ``MemoryPath``/``PathSelector`` can be shared across stores.
+
 The miss path is an asynchronous, batched pipeline (DESIGN.md §3.3):
 
 * a miss set's cold loads are batched into ``load_many_async`` calls of
@@ -50,7 +56,16 @@ class TieredStore:
     def __init__(self, n_pages: int, page_shape: Tuple[int, ...],
                  dtype="bfloat16", n_hot_slots: int = 8,
                  engine: Optional[MemoryEngine] = None,
-                 backend: Optional[TierBackend] = None):
+                 backend: Optional[TierBackend] = None,
+                 path=None, **path_kw):
+        """``path`` is the `repro.access` spelling of the cold tier: a
+        path name (``"xdma"``/``"qdma"``/``"verbs"``/``"auto"``), a
+        constructed ``MemoryPath``, or a ``PathSelector``.  A
+        ``MemoryPath`` is a superset of ``TierBackend``, so it slots in
+        as the backend directly — and, unless a dedicated ``engine`` is
+        passed, the hot-leg staging (H2C/C2H) rides the *same* path, so
+        one mechanism owns both hops and one stats() covers them.
+        ``backend=`` remains for bare tier backends."""
         if n_hot_slots < 1:
             raise ValueError(n_hot_slots)
         self.n_pages = n_pages
@@ -58,8 +73,23 @@ class TieredStore:
         self.dtype = jnp.dtype(dtype)
         self._np_dtype = np.dtype(self.dtype.name)
         self.n_hot_slots = min(n_hot_slots, n_pages)
-        self.engine = engine or MemoryEngine(n_channels=2)
         self.page_bytes = int(np.prod(self.page_shape)) * self.dtype.itemsize
+        self.path = None
+        if path is not None:
+            if backend is not None:
+                raise ValueError("pass either path= or backend=, not both")
+            if isinstance(path, str):
+                from repro.access.registry import create_path
+                path = create_path(path, n_pages=n_pages,
+                                   page_bytes=self.page_bytes, **path_kw)
+            self.path = path
+            backend = path                  # MemoryPath ⊇ TierBackend
+            if engine is None:
+                engine = MemoryEngine(path=path)   # shared, not owned
+        elif path_kw:
+            raise TypeError(f"unexpected kwargs {sorted(path_kw)} "
+                            f"(only valid with path=)")
+        self.engine = engine or MemoryEngine(n_channels=2)
         self.backend: TierBackend = backend if backend is not None else \
             LocalHostBackend(n_pages, self.page_bytes)
         if self.backend.n_pages < n_pages or \

@@ -1,0 +1,266 @@
+"""repro.access tests (ISSUE 3): the unified MemoryPath API, the path
+registry, the model-driven PathSelector (threshold crossover, decision
+trace, placement-routed reads), unified stats schema, explicit pool
+ownership, deprecation shims, and bit-exact `auto` serving."""
+import numpy as np
+import pytest
+
+from repro.access import (DEFAULT_REGISTRY, PathCapabilities, PathSelector,
+                          XdmaPath, create_path)
+from repro.core import MemoryEngine, QueueEngine, ChannelPool
+from repro.core.channels import Direction
+from repro.rmem import TieredStore
+from repro.rmem.backend import PendingIO
+
+PATH_NAMES = ("xdma", "qdma", "verbs")
+
+
+class TestAdapters:
+    @pytest.mark.parametrize("name", PATH_NAMES)
+    def test_page_roundtrip_bit_exact(self, name):
+        with create_path(name, n_pages=4, page_bytes=128, n_channels=1,
+                         doorbell_batch=2) as p:
+            rng = np.random.default_rng(3)
+            vals = {i: rng.integers(0, 256, 128, np.uint8).astype(np.uint8)
+                    for i in range(4)}
+            p.write(0, vals[0])
+            np.testing.assert_array_equal(p.read(0), vals[0])
+            p.write_many([1, 2, 3], [vals[1], vals[2], vals[3]])
+            out = p.read_many([3, 1])
+            np.testing.assert_array_equal(out[0], vals[3])
+            np.testing.assert_array_equal(out[1], vals[1])
+            io = p.read_many_async([2])
+            assert isinstance(io, PendingIO)
+            np.testing.assert_array_equal(io.wait()[0], vals[2])
+
+    @pytest.mark.parametrize("name", PATH_NAMES)
+    def test_stage_roundtrip_and_capabilities(self, name):
+        with create_path(name, n_channels=1) as p:    # stage-only
+            x = np.arange(64, dtype=np.float32)
+            dev = p.stage_h2c(x).wait()
+            np.testing.assert_array_equal(p.stage_c2h(dev).wait(), x)
+            caps = p.capabilities()
+            assert isinstance(caps, PathCapabilities)
+            assert caps.kind == name
+            assert caps.projected_seconds(1 << 20) > \
+                caps.projected_seconds(1 << 10)
+            # stage-only paths refuse page ops with a clear error
+            with pytest.raises(RuntimeError, match="stage-only"):
+                p.read(0)
+
+    def test_batch_coalescing_amortizes_setup_in_model(self):
+        # the capability hook: batched ops get cheaper per-op on
+        # coalescing paths, and stay flat on xdma
+        with create_path("qdma", n_channels=1) as q, \
+                create_path("xdma", n_channels=1) as x:
+            qc, xc = q.capabilities(), x.capabilities()
+            assert qc.batch_coalescing and not xc.batch_coalescing
+            assert qc.projected_seconds(4096, batch=8) < \
+                qc.projected_seconds(4096, batch=1)
+            assert xc.projected_seconds(4096, batch=8) == \
+                xc.projected_seconds(4096, batch=1)
+
+    def test_unified_stats_schema(self):
+        for name in PATH_NAMES:
+            with create_path(name, n_pages=2, page_bytes=64,
+                             n_channels=1) as p:
+                p.write(0, np.ones(64, np.uint8))
+                p.read(0)
+                dev = p.stage_h2c(np.ones(16, np.float32)).wait()
+                p.stage_c2h(dev).wait()
+                s = p.stats()
+                for key in ("path", "bytes_moved", "ops", "projected_s"):
+                    assert key in s, (name, key)
+                assert s["path"] == name
+                assert s["bytes_moved"] == 128 + 2 * 64  # pages + stages
+                assert s["ops"] == 4 and s["projected_s"] > 0
+
+    def test_engine_stats_unified_schema(self):
+        with MemoryEngine(n_channels=1, path="xdma") as eng:
+            dev = eng.write(np.ones(256, np.float32)).wait()
+            eng.read(dev).wait()
+            s = eng.stats()
+            assert s["path"] == "xdma"
+            assert s["bytes_moved"] == 2 * 1024
+            assert s["ops"] == 2 and s["projected_s"] > 0
+            assert "channels" in s     # mechanism detail nests below
+
+    def test_occupancy_prunes_out_of_order_completions(self):
+        """A slow transfer at the head of the in-flight deque must not
+        keep completed later transfers counted against the budget."""
+        class _T:
+            def __init__(self, done):
+                self._done = done
+
+            def poll(self):
+                return self._done
+
+        with create_path("xdma", n_channels=2) as p:
+            p._inflight.extend([_T(False), _T(True), _T(True)])
+            budget = p.capabilities().max_inflight
+            assert p.occupancy() == pytest.approx(1 / budget)
+            assert len(p._inflight) == 1      # finished tails pruned
+
+    def test_registry_rejects_unknown_and_filters_kwargs(self):
+        with pytest.raises(ValueError, match="unknown access path"):
+            create_path("tape")
+        # xdma ignores verbs-only kwargs instead of raising
+        with create_path("xdma", n_pages=1, page_bytes=32, n_channels=1,
+                         n_nodes=7, doorbell_batch=3) as p:
+            assert isinstance(p, XdmaPath)
+        with pytest.raises(ValueError, match="already registered"):
+            DEFAULT_REGISTRY.register("xdma", XdmaPath)
+
+
+class TestPoolOwnership:
+    def test_queue_engine_owns_created_pool(self):
+        qe = QueueEngine(n_channels=1)
+        assert qe.owns_pool
+        qe.close()
+        qe.close()                       # idempotent double close
+        assert not qe.pool.channels[0]._alive
+
+    def test_queue_engine_shared_pool_survives_engine_close(self):
+        with ChannelPool(1) as pool:
+            qe = QueueEngine(pool=pool)
+            assert not qe.owns_pool
+            qe.close()
+            qe.close()
+            assert pool.channels[0]._alive   # shared pool untouched
+
+    def test_memory_engine_double_close_and_path_ownership(self):
+        # engine-owned path: closed exactly once, close is idempotent
+        eng = MemoryEngine(n_channels=1, path="qdma")
+        qdma = eng.qdma
+        eng.close()
+        eng.close()
+        assert qdma._closed
+        # shared path: the engine must NOT close it
+        with create_path("xdma", n_channels=1) as p:
+            eng2 = MemoryEngine(path=p)
+            eng2.close()
+            assert p.pool.channels[0]._alive
+
+
+class TestPathSelector:
+    def _selector(self, page_bytes=1 << 20, n_pages=4):
+        return create_path("auto", n_pages=n_pages, page_bytes=page_bytes,
+                           n_channels=2, doorbell_batch=4)
+
+    def test_threshold_crossover_matches_model_argmin(self):
+        """Synthetic sizes: the selector's pick per (size, batch) bucket
+        equals the analytical-model argmin — small single ops go verbs
+        (tiny per-verb setup), large singles go xdma (widest link, no
+        scheduling hop), deep batches of mid sizes go qdma (ring
+        amortization)."""
+        with self._selector() as sel:
+            cases = {(4096, 1): "verbs", (1 << 20, 1): "xdma",
+                     (1 << 16, 8): "qdma", (4096, 8): "verbs"}
+            for (nbytes, batch), want in cases.items():
+                got = sel.select(nbytes, batch, Direction.H2C).name
+                proj = {p.name: p.capabilities().projected_seconds(
+                    nbytes, batch, Direction.H2C) for p in sel.paths}
+                argmin = min(proj, key=proj.get)
+                assert got == argmin, (nbytes, batch, got, argmin)
+                assert got == want, (nbytes, batch, got, want)
+
+    def test_decision_trace_recorded(self):
+        with self._selector(page_bytes=4096) as sel:
+            sel.write(0, np.ones(4096, np.uint8))
+            sel.write_many([1, 2], [np.ones(4096, np.uint8)] * 2)
+            sel.read_many([0, 1, 2])             # reads follow placement
+            trace = sel.decisions
+            assert [d.op for d in trace] == ["write", "write_many"]
+            d = trace[0]
+            assert d.nbytes == 4096 and d.batch == 1
+            assert set(d.scores) == {"xdma", "qdma", "verbs"}
+            assert d.chosen == d.model_argmin    # idle paths: no penalty
+            assert sel.stats()["decisions"] == 2
+
+    def test_reads_follow_placement_across_paths(self):
+        """Force pages onto different member paths; batched reads must
+        reassemble rows from every owner bit-exactly."""
+        with self._selector(page_bytes=256, n_pages=6) as sel:
+            by_name = {p.name: p for p in sel.paths}
+            rng = np.random.default_rng(7)
+            vals = {i: rng.integers(0, 256, 256, np.uint8).astype(np.uint8)
+                    for i in range(6)}
+            owners = ["xdma", "verbs", "qdma", "verbs", "xdma", "qdma"]
+            for page, owner in enumerate(owners):
+                by_name[owner].write(page, vals[page])
+                sel._placement[page] = by_name[owner]
+            out = sel.read_many([5, 0, 3, 1, 4, 2])
+            for row, page in enumerate([5, 0, 3, 1, 4, 2]):
+                np.testing.assert_array_equal(out[row], vals[page])
+
+    def test_occupancy_penalty_steers_selection(self):
+        with self._selector() as sel:
+            nbytes = 1 << 20
+            base = sel.select(nbytes, 1, Direction.H2C).name
+            assert base == "xdma"
+            # saturate xdma's in-flight budget -> the policy reroutes
+            xdma = next(p for p in sel.paths if p.name == "xdma")
+            xdma.occupancy = lambda: 1.0
+            rerouted = sel.select(nbytes, 1, Direction.H2C).name
+            assert rerouted != "xdma"
+            d = sel.decisions[-1]
+            assert d.occupancy["xdma"] == 1.0
+            assert d.model_argmin == "xdma"      # raw model still says xdma
+
+    def test_selector_as_tiered_store_backend(self):
+        with TieredStore(6, (32,), dtype="float32", n_hot_slots=2,
+                         path="auto", n_channels=1,
+                         doorbell_batch=2) as st:
+            assert isinstance(st.path, PathSelector)
+            for p in range(6):
+                st.write_page(p, np.full(32, p, np.float32))
+            got = st.ensure([1, 4])
+            assert float(np.asarray(got[4])[0]) == 4.0
+            st.ensure([2, 5])                    # evictions through paths
+            got = st.ensure([1, 3])
+            assert float(np.asarray(got[1])[0]) == 1.0
+            s = st.stats()
+            assert s["cold"]["path"] == "auto"
+            assert s["cold"]["placement"]        # selector placed pages
+
+    def test_selector_geometry_mismatch_rejected(self):
+        with create_path("xdma", n_pages=2, page_bytes=64) as a, \
+                create_path("verbs", n_pages=4, page_bytes=64) as b:
+            with pytest.raises(ValueError, match="geometry"):
+                PathSelector([a, b])
+
+
+class TestDeprecations:
+    def test_engine_flavor_warns(self):
+        with pytest.warns(DeprecationWarning, match="flavor"):
+            eng = MemoryEngine(n_channels=1, flavor="xdma")
+        eng.close()
+
+    def test_kvpager_alias_warns(self):
+        from repro.core import KVPager
+        with pytest.warns(DeprecationWarning, match="KVPager"):
+            pg = KVPager(n_pages=2, page_shape=(4,), dtype="float32",
+                         n_hbm_slots=1)
+        pg.close()
+
+
+class TestServeAutoParity:
+    def test_auto_serve_bit_exact_vs_every_pinned_path(self):
+        from repro.launch.serve import main
+
+        def run(extra):
+            return main(["--smoke", "--requests", "2", "--max-new", "3",
+                         "--slots", "2", "--prompt-len", "6"] + extra)
+
+        results = {name: run(["--access-path", name])
+                   for name in ("xdma", "qdma", "verbs", "auto")}
+        base = results["xdma"]["outputs"]
+        assert base                           # actually served tokens
+        for name, res in results.items():
+            assert res["outputs"] == base, f"{name} diverged"
+        auto = results["auto"]
+        assert auto["kv"]["cold"]["path"] == "auto"
+        # every placement decision matched the model argmin
+        assert auto["path_decisions"]
+        for d in auto["path_decisions"]:
+            assert d["chosen"] == d["model_argmin"]

@@ -1,7 +1,7 @@
 """Analytical bandwidth model vs the paper's measured anchors (§6)."""
 import pytest
 
-from repro.core.analytical import (bandwidth_gbps, chan_eff, paper_pcie_bram,
+from repro.core.analytical import (bandwidth_gbps, paper_pcie_bram,
                                    paper_pcie_ddr4, tpu_host_path,
                                    tpu_ici_path)
 from repro.core.channels import Direction

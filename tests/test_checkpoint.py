@@ -1,5 +1,4 @@
 """Checkpoint manager: roundtrip, async save, corruption, gc, resharding."""
-import json
 import os
 
 import jax

@@ -202,13 +202,23 @@ class TestQueueEngine:
 
 
 class TestEngineAndOffload:
-    def test_engine_flavors_roundtrip(self):
-        for flavor in ("xdma", "qdma"):
-            with MemoryEngine(n_channels=2, flavor=flavor) as eng:
+    def test_engine_paths_roundtrip(self):
+        for path in ("xdma", "qdma", "auto"):
+            with MemoryEngine(n_channels=2, path=path) as eng:
                 y = np.random.default_rng(0).standard_normal(
                     (64, 64)).astype(np.float32)
                 d = eng.write(y).wait()
                 np.testing.assert_array_equal(eng.read(d).wait(), y)
+                assert eng.flavor == path
+
+    def test_engine_flavor_spelling_deprecated_but_works(self):
+        with pytest.warns(DeprecationWarning, match="flavor"):
+            eng = MemoryEngine(n_channels=1, flavor="qdma")
+        with eng:
+            d = eng.write(np.ones(32, np.float32)).wait()
+            np.testing.assert_array_equal(eng.read(d).wait(),
+                                          np.ones(32, np.float32))
+            assert eng.qdma is not None
 
     def test_offloaded_optimizer_matches_device(self):
         params = {"w": jnp.ones((16, 16)), "b": jnp.zeros((16,))}
@@ -223,7 +233,8 @@ class TestEngineAndOffload:
                                        np.asarray(want[k]), rtol=1e-6)
 
     def test_pager_eviction_preserves_data(self):
-        pg = KVPager(n_pages=12, page_shape=(4, 8), n_hbm_slots=3)
+        with pytest.warns(DeprecationWarning, match="KVPager"):
+            pg = KVPager(n_pages=12, page_shape=(4, 8), n_hbm_slots=3)
         for p in range(12):
             pg.write_page(p, np.full((4, 8), p, np.float32))
         pg.ensure([0, 1, 2])
@@ -237,6 +248,7 @@ class TestEngineAndOffload:
         assert pg.c2h_bytes == pg.page_bytes and pg.h2c_bytes > 0
 
     def test_pager_rejects_oversubscription(self):
-        pg = KVPager(n_pages=8, page_shape=(2, 2), n_hbm_slots=2)
+        with pytest.warns(DeprecationWarning, match="KVPager"):
+            pg = KVPager(n_pages=8, page_shape=(2, 2), n_hbm_slots=2)
         with pytest.raises(ValueError):
             pg.ensure([0, 1, 2])

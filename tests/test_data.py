@@ -1,6 +1,5 @@
 """Data pipeline: packing, shard disjointness, mmap corpus, prefetcher."""
 import numpy as np
-import pytest
 
 from repro.data.pipeline import (BatchSpec, DevicePrefetcher, MMapCorpus,
                                  PackedBatcher, SyntheticCorpus)

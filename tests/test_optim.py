@@ -2,10 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim.adamw import AdamW, for_arch
-from repro.optim.compression import (EFState, compress_for_allreduce,
+from repro.optim.compression import (compress_for_allreduce,
                                      dequantize_int8, ef_compress, ef_init,
                                      quantize_int8)
 

@@ -292,13 +292,19 @@ class TestServeIntegration:
     def test_kv_paging_remote_smoke_and_parity(self):
         base = self._serve([])
         local = self._serve(["--kv-paging"])
-        remote = self._serve(["--kv-paging", "--kv-backend", "remote"])
+        remote = self._serve(["--access-path", "verbs"])
         # paging must not change served tokens, on either backend
         assert base["outputs"] == local["outputs"] == remote["outputs"]
         assert local["kv"]["cold"]["tier"] == "local-host"
         assert remote["kv"]["cold"]["tier"] == "remote"
         assert remote["kv"]["cold"]["bytes_stored"] > 0
         assert remote["kv"]["h2c_bytes"] > 0
+
+    def test_kv_backend_flag_deprecated_alias(self):
+        with pytest.warns(DeprecationWarning, match="--kv-backend"):
+            remote = self._serve(["--kv-paging", "--kv-backend", "remote"])
+        assert remote["access_path"] == "verbs"
+        assert remote["kv"]["cold"]["tier"] == "remote"
 
 
 class TestFarCheckpoint:

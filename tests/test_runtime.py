@@ -1,5 +1,4 @@
 """Fault tolerance + elastic scaling unit tests."""
-import time
 
 import pytest
 

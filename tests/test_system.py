@@ -3,12 +3,9 @@
 These drive the actual launchers (repro.launch.train / serve) the way a
 user would, on reduced configs.
 """
-import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
