@@ -13,8 +13,8 @@ import sys
 import traceback
 
 from benchmarks import (completion_modes, contention, e2e_step, far_memory,
-                        host_device_bw, offload_step, rdma_analogue,
-                        vmem_stream)
+                        host_device_bw, offload_step, overlap,
+                        rdma_analogue, vmem_stream)
 
 MODULES = [
     ("fig8_vmem_stream", vmem_stream),
@@ -24,6 +24,7 @@ MODULES = [
     ("fig19_20_rdma_analogue", rdma_analogue),
     ("tab1_offload_step", offload_step),
     ("farmem_tier_sweep", far_memory),
+    ("serve_overlap", overlap),
     ("e2e_and_roofline", e2e_step),
 ]
 

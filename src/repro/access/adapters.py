@@ -36,6 +36,7 @@ from repro.core.analytical import (far_memory_path, qdma_host_path,
 from repro.core.channels import (ChannelPool, CompletionMode, Direction,
                                  Transfer)
 from repro.core.queues import QueueEngine
+from repro.cplane import default_reactor
 from repro.rmem.backend import (LocalHostBackend, PendingIO, RemoteBackend,
                                 TierBackend)
 
@@ -44,12 +45,16 @@ _BOTH_MODES = (CompletionMode.POLLED, CompletionMode.INTERRUPT)
 
 class _AdapterBase(TierBackendCompat):
     """Shared plumbing: page ops over a wrapped ``TierBackend``, stage-op
-    accounting, occupancy from in-flight stage transfers."""
+    accounting, occupancy from in-flight stage transfers, and the
+    completion-plane telemetry binding: each adapter owns two reactor
+    sources — ``<name>#<n>:page`` (cold-tier ops) and ``<name>#<n>:stage``
+    (host<->device transfers) — whose latency/in-flight EWMAs feed
+    ``PathSelector``'s measured scoring (DESIGN.md §6)."""
 
     name = "path"
 
     def __init__(self, backend: Optional[TierBackend],
-                 caps: PathCapabilities):
+                 caps: PathCapabilities, reactor=None):
         self.backend = backend
         self._caps = caps
         self.n_pages = backend.n_pages if backend is not None else 0
@@ -60,6 +65,19 @@ class _AdapterBase(TierBackendCompat):
         self._inflight: deque = deque()     # unfinished stage Transfers
         self._lock = threading.Lock()
         self._closed = False
+        self.reactor = reactor if reactor is not None else default_reactor()
+        stem = self.reactor.unique_source(self.name)
+        self._page_source = f"{stem}:page"
+        self._stage_source = f"{stem}:stage"
+        if backend is not None:
+            backend.bind_telemetry(self.reactor, self._page_source)
+        pool = getattr(self, "pool", None)
+        if pool is not None:
+            pool.bind_telemetry(self.reactor, self._stage_source)
+
+    def telemetry_source(self, stage: bool = False) -> str:
+        """The reactor source this adapter's ops report into."""
+        return self._stage_source if stage else self._page_source
 
     def capabilities(self) -> PathCapabilities:
         return self._caps
@@ -140,13 +158,19 @@ class _AdapterBase(TierBackendCompat):
         cold_proj = base.get("projected_s", 0.0)
         detail = {k: v for k, v in base.items()
                   if k not in ("path", "bytes_moved", "ops", "projected_s")}
+        telemetry = {kind: self.reactor.source_telemetry(src)
+                     for kind, src in (("page", self._page_source),
+                                       ("stage", self._stage_source))}
         return unified_stats(
             self.name,
             bytes_moved=cold_moved + self.stage_bytes,
             ops=cold_ops + self.stage_ops,
             projected_s=cold_proj + self._stage_projected_s,
             stage_bytes=self.stage_bytes, stage_ops=self.stage_ops,
-            occupancy=self.occupancy(), **detail)
+            occupancy=self.occupancy(),
+            telemetry={k: v for k, v in telemetry.items()
+                       if v is not None},
+            **detail)
 
     def close(self) -> None:
         if self._closed:
@@ -156,7 +180,11 @@ class _AdapterBase(TierBackendCompat):
             if self.backend is not None:
                 self.backend.close()
         finally:
-            self._close_stage()
+            try:
+                self._close_stage()
+            finally:
+                self.reactor.unregister_source(self._page_source)
+                self.reactor.unregister_source(self._stage_source)
 
     def _close_stage(self) -> None:
         raise NotImplementedError
@@ -231,7 +259,7 @@ class QdmaPath(_AdapterBase):
 
     def _submit_stage(self, payload, direction, on_complete, qname):
         item = self.qdma.submit(qname, payload, direction)
-        item.assigned.wait()       # scheduler attaches the Transfer
+        item.assigned.wait(30.0)   # scheduler attaches the Transfer
         return item.transfer
 
     def occupancy(self) -> float:
@@ -261,7 +289,8 @@ class VerbsPath(_AdapterBase):
                  n_nodes: int = 1, doorbell_batch: int = 4, nodes=None,
                  n_channels: int = 2, device=None,
                  chunk_bytes: int = 1 << 22,
-                 mode: CompletionMode = CompletionMode.POLLED):
+                 mode: CompletionMode = CompletionMode.POLLED,
+                 node_latency_s: float = 0.0):
         self.pool = ChannelPool(n_channels, device=device,
                                 chunk_bytes=chunk_bytes)
         self.mode = mode
@@ -269,7 +298,9 @@ class VerbsPath(_AdapterBase):
         backend = RemoteBackend(n_pages, page_bytes, nodes=nodes,
                                 n_nodes=n_nodes,
                                 doorbell_batch=doorbell_batch,
-                                mode=mode) if n_pages else None
+                                mode=mode,
+                                node_latency_s=node_latency_s) \
+            if n_pages else None
         super().__init__(backend, PathCapabilities(
             kind="verbs", granularity_bytes=64,      # WQE-inline floor
             max_inflight=max(doorbell_batch, 1) * 16,

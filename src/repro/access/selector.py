@@ -4,10 +4,22 @@
 code: given the member paths' ``PathCapabilities`` it scores every
 candidate with the analytical models (``core.analytical``) — per-op setup
 amortized over the batch depth iff the path coalesces, link bandwidth,
-direction asymmetry — inflated by current queue occupancy, and routes
-each request to the argmin.  Every selection appends a ``PathDecision``
-(sizes, per-path scores, raw model projections, the choice) to a bounded
-trace, so benches and tests can audit that the policy matches the model.
+direction asymmetry — and routes each request to the argmin.  Every
+selection appends a ``PathDecision`` (sizes, per-path scores, raw model
+projections, the choice) to a bounded trace, so benches and tests can
+audit that the policy matches the model.
+
+Contention handling is *measured* (DESIGN.md §6): each member path
+reports its completions into a reactor source, and the selector adds a
+per-path queueing delay of ``inflight × EWMA latency`` on top of the
+model projection — the calibration loop the DPU-optimization literature
+shows cross-path routing needs.  With idle queues the measured term is
+zero and decisions coincide exactly with the analytical argmin (the
+property the bench sweep audits); under load the observed EWMA — not a
+static inflation guess — steers requests away from the backed-up path,
+and the decision records ``measured=True`` with the observed values.
+Paths without telemetry (or without enough samples yet) fall back to
+the static occupancy inflation.
 
 The selector itself implements ``MemoryPath``, so anything that takes a
 path takes a selector: page *writes* are placed per-request by the model
@@ -20,7 +32,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -29,6 +41,7 @@ from repro.access.path import (MemoryPath, PathCapabilities,
                                TierBackendCompat, unified_stats)
 from repro.core.analytical import PathModel
 from repro.core.channels import Direction, Transfer
+from repro.cplane import default_reactor
 from repro.rmem.backend import PendingIO
 
 
@@ -36,10 +49,13 @@ from repro.rmem.backend import PendingIO
 class PathDecision:
     """One routing decision: what was asked, how each path scored, who won.
 
-    ``scores`` are occupancy-inflated projected seconds (what the policy
-    minimizes); ``projected`` are the raw analytical-model seconds (the
-    paper's guidance with all queues idle).  When every path is idle the
-    two argmins coincide — the property the bench sweep audits.
+    ``scores`` are what the policy minimizes; ``projected`` are the raw
+    analytical-model seconds (the paper's guidance with all queues idle)
+    — retained on every decision as the prior and the audit.  When every
+    path is idle the two argmins coincide — the property the bench sweep
+    audits.  ``measured`` is True when a reactor-observed queueing delay
+    (in-flight × EWMA latency) entered the scores; ``observed`` then maps
+    path name -> that measured delay in seconds.
     """
 
     op: str
@@ -50,6 +66,8 @@ class PathDecision:
     projected: Dict[str, float]
     occupancy: Dict[str, float]
     chosen: str
+    measured: bool = False
+    observed: Dict[str, float] = field(default_factory=dict)
 
     @property
     def model_argmin(self) -> str:
@@ -62,7 +80,8 @@ class PathSelector(TierBackendCompat):
     name = "auto"
 
     def __init__(self, paths: Sequence[MemoryPath],
-                 occupancy_penalty: float = 2.0, trace_limit: int = 4096):
+                 occupancy_penalty: float = 2.0, trace_limit: int = 4096,
+                 reactor=None, min_measured_samples: int = 3):
         paths = list(paths)
         if not paths:
             raise ValueError("PathSelector needs at least one path")
@@ -71,6 +90,10 @@ class PathSelector(TierBackendCompat):
             raise ValueError(f"duplicate path names: {names}")
         self.paths = paths
         self.occupancy_penalty = occupancy_penalty
+        self.reactor = reactor if reactor is not None else default_reactor()
+        # EWMAs are noise until a few completions have landed; below this
+        # the path scores on the model prior + static occupancy fallback
+        self.min_measured_samples = min_measured_samples
         self._decisions: deque = deque(maxlen=max(trace_limit, 1))
         self._placement: Dict[int, MemoryPath] = {}
         self._lock = threading.Lock()
@@ -88,13 +111,44 @@ class PathSelector(TierBackendCompat):
             (getattr(p, "doorbell_batch", 0) for p in paths), default=0)
 
     # -- policy ----------------------------------------------------------
+    def _measured_delay(self, path: MemoryPath,
+                        stage: bool) -> Optional[float]:
+        """Reactor-observed queueing delay for ``path``: in-flight ops ×
+        EWMA completion latency (Little's-law expected wait for the
+        path's queue to drain).  ``None`` when the path exposes no
+        telemetry source or hasn't completed enough ops to trust the
+        EWMA; ``0.0`` when it is measurably idle."""
+        src_fn = getattr(path, "telemetry_source", None)
+        if src_fn is None:
+            return None
+        st = self.reactor.stats_for(src_fn(stage=stage))
+        if st is None or st.completed < self.min_measured_samples:
+            return None
+        return st.inflight * st.ewma_latency_s
+
+    def _score_path(self, path: MemoryPath, nbytes: int, batch: int,
+                    direction: Direction, stage: bool):
+        """The one scoring formula: ``(score, projected, occupancy,
+        measured_delay)``.  Measured paths score model prior + observed
+        queueing delay; unmeasured ones fall back to the static
+        occupancy inflation.  ``select`` and ``score`` both route
+        through here so the audited trace can never diverge from the
+        actual policy."""
+        proj = path.capabilities().projected_seconds(
+            nbytes, batch, direction, stage) * max(batch, 1)
+        occ = path.occupancy()
+        delay = self._measured_delay(path, stage)
+        if delay is None:
+            return (proj * (1.0 + self.occupancy_penalty * occ),
+                    proj, occ, None)
+        return proj + self.occupancy_penalty * delay, proj, occ, delay
+
     def score(self, path: MemoryPath, nbytes: int, batch: int = 1,
               direction: Direction = Direction.C2H,
               stage: bool = False) -> float:
-        """Occupancy-inflated projected seconds for the whole request."""
-        proj = path.capabilities().projected_seconds(
-            nbytes, batch, direction, stage) * max(batch, 1)
-        return proj * (1.0 + self.occupancy_penalty * path.occupancy())
+        """Projected seconds plus the path's measured queueing delay
+        (static occupancy inflation when unmeasured)."""
+        return self._score_path(path, nbytes, batch, direction, stage)[0]
 
     def select(self, nbytes: int, batch: int = 1,
                direction: Direction = Direction.C2H, op: str = "write",
@@ -103,20 +157,19 @@ class PathSelector(TierBackendCompat):
                ) -> MemoryPath:
         cands = list(candidates) if candidates is not None else (
             self.paths if stage else (self._paged or self.paths))
-        scores, projected, occ = {}, {}, {}
+        scores, projected, occ, observed = {}, {}, {}, {}
         for p in cands:
-            caps = p.capabilities()
-            projected[p.name] = caps.projected_seconds(
-                nbytes, batch, direction, stage) * max(batch, 1)
-            occ[p.name] = p.occupancy()
-            scores[p.name] = projected[p.name] * \
-                (1.0 + self.occupancy_penalty * occ[p.name])
+            (scores[p.name], projected[p.name], occ[p.name],
+             delay) = self._score_path(p, nbytes, batch, direction, stage)
+            if delay:
+                observed[p.name] = delay
         chosen = min(cands, key=lambda p: scores[p.name])
         with self._lock:
             self._decisions.append(PathDecision(
                 op=op, nbytes=int(nbytes), batch=int(batch),
                 direction=direction.value, scores=scores,
-                projected=projected, occupancy=occ, chosen=chosen.name))
+                projected=projected, occupancy=occ, chosen=chosen.name,
+                measured=bool(observed), observed=observed))
         return chosen
 
     @property
@@ -225,7 +278,13 @@ class PathSelector(TierBackendCompat):
             for rows, io in parts:
                 out[np.asarray(rows, np.int64)] = io.wait(timeout)
             return out
-        return PendingIO(finalize)
+        # deps: the member IOs themselves, so the composite stays
+        # poll()/wait_any-composable — unless a member is a legacy eager
+        # handle that only resolves inside wait(), in which case the
+        # composite must stay eager too or it would never settle
+        ios = [io for _, io in parts]
+        reactive = all(getattr(io, "reactive", False) for io in ios)
+        return PendingIO(finalize, deps=ios if reactive else None)
 
     # -- stage ops: select per transfer ----------------------------------
     def stage_h2c(self, host_arr, on_complete=None,

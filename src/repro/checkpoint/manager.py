@@ -159,33 +159,39 @@ class CheckpointManager:
         leaves_dev, treedef = _flatten_with_path(tree)
         host_leaves = self.engine.read_tree_async(
             [l for _, l in leaves_dev])()
-        qp = QueuePair(node, doorbell_batch=doorbell_batch)
         entries: List[Dict[str, Any]] = []
         keepalive = []                     # MRs must outlive the doorbell
-        for (path, _), leaf in zip(leaves_dev, host_leaves):
-            arr = np.asarray(leaf)
-            # ascontiguousarray promotes 0-d to (1,): record shape first
-            flat = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
-            name = _leaf_name(path)
-            prev = reuse_addrs.get(name)
-            if prev is not None and prev["nbytes"] == arr.nbytes:
-                addr = prev["addr"]
-            else:
-                addr = node.alloc(max(arr.nbytes, 1))
-            mr = MemoryRegion(flat if arr.nbytes else np.zeros(1, np.uint8))
-            keepalive.append(mr)
-            qp.post_write(mr, 0, addr, max(arr.nbytes, 1))
-            entry = {"name": name, "addr": addr,
-                     "nbytes": arr.nbytes, "shape": list(arr.shape),
-                     "dtype": str(arr.dtype)}
-            if self.digest:
-                entry["sha256"] = hashlib.sha256(
-                    arr.tobytes()).hexdigest()[:16]
-            entries.append(entry)
-        qp.flush()
-        return {"step": step, "node": node.name, "leaves": entries,
-                "bytes": sum(e["nbytes"] for e in entries),
-                "qp": qp.stats()}
+        # context-managed: a per-checkpoint QP must not leak its reactor
+        # telemetry source (periodic far checkpoints would accumulate
+        # one per save forever)
+        with QueuePair(node, doorbell_batch=doorbell_batch) as qp:
+            for (path, _), leaf in zip(leaves_dev, host_leaves):
+                arr = np.asarray(leaf)
+                # ascontiguousarray promotes 0-d to (1,): record shape
+                # first
+                flat = np.ascontiguousarray(arr).reshape(-1) \
+                    .view(np.uint8)
+                name = _leaf_name(path)
+                prev = reuse_addrs.get(name)
+                if prev is not None and prev["nbytes"] == arr.nbytes:
+                    addr = prev["addr"]
+                else:
+                    addr = node.alloc(max(arr.nbytes, 1))
+                mr = MemoryRegion(flat if arr.nbytes
+                                  else np.zeros(1, np.uint8))
+                keepalive.append(mr)
+                qp.post_write(mr, 0, addr, max(arr.nbytes, 1))
+                entry = {"name": name, "addr": addr,
+                         "nbytes": arr.nbytes, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+                if self.digest:
+                    entry["sha256"] = hashlib.sha256(
+                        arr.tobytes()).hexdigest()[:16]
+                entries.append(entry)
+            qp.flush()
+            return {"step": step, "node": node.name, "leaves": entries,
+                    "bytes": sum(e["nbytes"] for e in entries),
+                    "qp": qp.stats()}
 
     def restore_far(self, like: Any, manifest: Dict[str, Any],
                     node) -> Tuple[int, Any]:
@@ -195,25 +201,27 @@ class CheckpointManager:
         from repro.rmem.verbs import MemoryRegion, QueuePair
         by_name = {e["name"]: e for e in manifest["leaves"]}
         leaves_like, treedef = _flatten_with_path(like)
-        qp = QueuePair(node)
         out = []
-        for path, leaf in leaves_like:
-            name = _leaf_name(path)
-            if name not in by_name:
-                raise KeyError(f"leaf {name} missing from far snapshot")
-            e = by_name[name]
-            raw = np.zeros(max(e["nbytes"], 1), np.uint8)
-            qp.read(MemoryRegion(raw), 0, e["addr"], max(e["nbytes"], 1))
-            raw = raw[:e["nbytes"]]
-            if self.digest and "sha256" in e:
-                h = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
-                if h != e["sha256"]:
-                    raise IOError(f"far digest mismatch for {name}")
-            arr = raw.view(jnp.dtype(e["dtype"])).reshape(e["shape"])
-            if tuple(arr.shape) != tuple(leaf.shape):
-                raise ValueError(f"shape mismatch {name}: far {arr.shape} "
-                                 f"vs model {leaf.shape}")
-            out.append(jax.device_put(arr))
+        with QueuePair(node) as qp:
+            for path, leaf in leaves_like:
+                name = _leaf_name(path)
+                if name not in by_name:
+                    raise KeyError(f"leaf {name} missing from far "
+                                   f"snapshot")
+                e = by_name[name]
+                raw = np.zeros(max(e["nbytes"], 1), np.uint8)
+                qp.read(MemoryRegion(raw), 0, e["addr"],
+                        max(e["nbytes"], 1))
+                raw = raw[:e["nbytes"]]
+                if self.digest and "sha256" in e:
+                    h = hashlib.sha256(raw.tobytes()).hexdigest()[:16]
+                    if h != e["sha256"]:
+                        raise IOError(f"far digest mismatch for {name}")
+                arr = raw.view(jnp.dtype(e["dtype"])).reshape(e["shape"])
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    raise ValueError(f"shape mismatch {name}: far "
+                                     f"{arr.shape} vs model {leaf.shape}")
+                out.append(jax.device_put(arr))
         return manifest["step"], jax.tree.unflatten(treedef, out)
 
     # -- restore --------------------------------------------------------------

@@ -9,7 +9,11 @@ Public API:
 
 The far-memory tier (RDMA-style verbs, memory nodes, remote backends)
 lives in ``repro.rmem`` (DESIGN.md §4); ``TieredStore``/``KVPager`` accept
-its backends to page against it.  The unified access-path API — one
+its backends to page against it.  Every async primitive here settles a
+``repro.cplane.Completion`` (DESIGN.md §6): ``Transfer`` IS one,
+``WorkItem.done/assigned`` are completions, and all of them compose
+with verbs doorbells and tier ``PendingIO`` handles via
+``cplane.wait_any``/``wait_all``/``as_completed``.  The unified access-path API — one
 ``MemoryPath`` protocol over XDMA/QDMA/verbs plus the model-driven
 ``PathSelector`` — lives in ``repro.access`` (DESIGN.md §5);
 ``MemoryEngine`` is now a thin facade over it (``path="xdma"|"qdma"|

@@ -9,6 +9,14 @@ single channel cannot (Figs 15-18).
 Directions follow the paper's naming: H2C = host->card (device_put),
 C2H = card->host (device_get).  Completion is either POLLED (caller blocks)
 or INTERRUPT (callback fired from the channel thread — the MSI-X analogue).
+
+Since the completion-plane refactor (DESIGN.md §6), ``Transfer`` *is* a
+``cplane.Completion``: the pool registers as a reactor source, every
+transfer records submit/settle latency into that source's EWMAs, and
+transfers compose with any other completion via ``wait_any``/
+``wait_all``/``as_completed``.  The established ``poll()``/``wait()``/
+``result()`` surface is unchanged (``wait`` now raises
+``cplane.CompletionTimeout``, a ``TimeoutError`` subclass).
 """
 from __future__ import annotations
 
@@ -16,11 +24,12 @@ import enum
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Sequence
 
 import jax
 import numpy as np
+
+from repro.cplane import Completion, default_reactor
 
 
 class Direction(enum.Enum):
@@ -33,62 +42,58 @@ class CompletionMode(enum.Enum):
     INTERRUPT = "interrupt"
 
 
-@dataclass
-class Transfer:
-    """One submitted (possibly multi-chunk) transfer.
+class Transfer(Completion):
+    """One submitted (possibly multi-chunk) transfer — a ``Completion``.
 
     Multi-chunk C2H transfers assemble in place: the pool preallocates one
     host buffer and each channel lands its chunk directly into a view of it
     (``_dest_views``), so the result is one copy per chunk instead of a
-    device_get copy plus an ``np.concatenate`` pass.
+    device_get copy plus an ``np.concatenate`` pass.  Result assembly is
+    lazy (``succeed_lazy``): the concatenate runs on the waiter's thread
+    at first ``result()``, exactly where it always ran.
     """
-    direction: Direction
-    n_chunks: int
-    t_submit: float
-    device: Any
-    on_complete: Optional[Callable[["Transfer"], None]] = None
-    _done: int = 0
-    _bytes: int = 0
-    _results: list = field(default_factory=list)
-    _event: threading.Event = field(default_factory=threading.Event)
-    _lock: threading.Lock = field(default_factory=threading.Lock)
-    _assemble: Optional[np.ndarray] = None      # preallocated C2H buffer
-    _dest_views: Optional[List[np.ndarray]] = None
-    t_done: float = 0.0
+
+    def __init__(self, direction: Direction, n_chunks: int, t_submit: float,
+                 device: Any,
+                 on_complete: Optional[Callable[["Transfer"], None]] = None,
+                 source: Optional[str] = None, reactor=None):
+        super().__init__(source=source, reactor=reactor)
+        self.t_submit = t_submit
+        self.direction = direction
+        self.n_chunks = n_chunks
+        self.device = device
+        self.on_complete = on_complete
+        self._chunks_done = 0
+        self._bytes = 0
+        self._results: list = []
+        self._chunk_lock = threading.Lock()
+        self._assemble: Optional[np.ndarray] = None  # preallocated C2H buf
+        self._dest_views: Optional[List[np.ndarray]] = None
 
     def _chunk_done(self, idx: int, out, nbytes: int) -> None:
         """Record one finished chunk; ``out`` may be an Exception.
 
         Failed chunks flow through here too, so a multi-chunk transfer
-        with one bad chunk still counts down ``_done``, sets the event,
-        and fires ``on_complete`` — waiters see the error from
-        ``result()`` instead of hanging.
+        with one bad chunk still settles (ERROR), fires ``on_complete``,
+        and wakes waiters — they see the error instead of hanging.
         """
-        with self._lock:
+        with self._chunk_lock:
             self._results.append((idx, out))
             self._bytes += nbytes
-            self._done += 1
-            finished = self._done == self.n_chunks
+            self._chunks_done += 1
+            finished = self._chunks_done == self.n_chunks
         if finished:
-            self.t_done = time.perf_counter()
-            self._event.set()
+            self.nbytes = self._bytes
+            err = next((o for _, o in self._results
+                        if isinstance(o, Exception)), None)
+            if err is not None:
+                self.fail(err)
+            else:
+                self.succeed_lazy(self._assemble_result)
             if self.on_complete is not None:
                 self.on_complete(self)
 
-    # -- polled-mode interface -------------------------------------------
-    def poll(self) -> bool:
-        return self._event.is_set()
-
-    def wait(self, timeout: Optional[float] = None):
-        if not self._event.wait(timeout):
-            raise TimeoutError("transfer did not complete")
-        return self.result()
-
-    def result(self):
-        assert self._event.is_set()
-        for _, o in self._results:
-            if isinstance(o, Exception):
-                raise o
+    def _assemble_result(self):
         if self._assemble is not None:
             return self._assemble       # chunks already landed in place
         parts = [o for _, o in sorted(self._results, key=lambda p: p[0])]
@@ -98,10 +103,6 @@ class Transfer:
             import jax.numpy as jnp
             return jnp.concatenate(parts, axis=0)
         return np.concatenate(parts, axis=0)
-
-    @property
-    def seconds(self) -> float:
-        return max(self.t_done - self.t_submit, 1e-9)
 
     @property
     def gbps(self) -> float:
@@ -158,13 +159,28 @@ class ChannelPool:
     """N-channel engine with round-robin chunk interleaving."""
 
     def __init__(self, n_channels: int = 4, device=None,
-                 chunk_bytes: int = 1 << 22):
+                 chunk_bytes: int = 1 << 22, reactor=None,
+                 source: Optional[str] = None):
         if n_channels < 1:
             raise ValueError(n_channels)
         self.channels = [Channel(f"ch{i}") for i in range(n_channels)]
         self.device = device if device is not None else jax.devices()[0]
         self.chunk_bytes = chunk_bytes
         self._rr = 0
+        # completion-plane source: channel threads settle transfers, so
+        # the pool registers as an interrupt source; every transfer's
+        # latency/bytes feed this source's EWMAs
+        self._reactor = reactor if reactor is not None else default_reactor()
+        self._source = source or self._reactor.unique_source("xdma-pool")
+        self._reactor.register_source(self._source, mode="interrupt")
+
+    def bind_telemetry(self, reactor, source: str) -> None:
+        """Re-point this pool's completion telemetry at ``source`` (how
+        an access-path adapter claims the transfers it submits)."""
+        self._reactor.unregister_source(self._source)
+        self._reactor = reactor
+        self._source = source
+        reactor.register_source(source, mode="interrupt")
 
     @property
     def n_channels(self) -> int:
@@ -188,7 +204,8 @@ class ChannelPool:
         tr = Transfer(direction=direction, n_chunks=len(chunks),
                       t_submit=time.perf_counter(), device=self.device,
                       on_complete=on_complete if
-                      mode == CompletionMode.INTERRUPT else None)
+                      mode == CompletionMode.INTERRUPT else None,
+                      source=self._source, reactor=self._reactor)
         if direction == Direction.C2H and len(chunks) > 1:
             try:
                 buf = np.empty(arr.shape, np.dtype(arr.dtype))
@@ -223,6 +240,7 @@ class ChannelPool:
     def close(self) -> None:
         for c in self.channels:
             c.close()
+        self._reactor.unregister_source(self._source)
 
     def __enter__(self):
         return self

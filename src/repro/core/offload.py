@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.core.engine import MemoryEngine
+from repro.cplane import wait_all
 from repro.rmem.backend import TierBackend
 from repro.rmem.store import TieredStore
 
@@ -85,9 +86,12 @@ class HostOffloadedOptimizer:
                                            m_dev, v_dev, step_idx)
             new_p.append(p2)
             c2h.append((i, self.engine.read(m2), self.engine.read(v2)))
+        # one barrier over the whole C2H drain (transfers are cplane
+        # completions now), then collect in leaf order
+        wait_all([t for _, tm, tv in c2h for t in (tm, tv)])
         for i, tm, tv in c2h:
-            new_m_host.append(tm.wait())
-            new_v_host.append(tv.wait())
+            new_m_host.append(tm.result())
+            new_v_host.append(tv.result())
 
         mdef = jax.tree.structure(self.host_state["m"])
         self.host_state = {"m": jax.tree.unflatten(mdef, new_m_host),

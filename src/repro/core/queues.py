@@ -13,26 +13,27 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
 from repro.core.channels import (ChannelPool, CompletionMode, Direction,
                                  Transfer)
+from repro.cplane import Completion
 
 
 @dataclass
 class WorkItem:
+    """One queued descriptor.  ``assigned`` settles (with the attached
+    ``Transfer``) when the scheduler dispatches it to a channel; ``done``
+    settles when the transfer finishes — both are ``cplane.Completion``s,
+    so work items compose with any other async primitive via
+    ``wait_any``/``wait_all``."""
+
     payload: Any
     direction: Direction
     transfer: Optional[Transfer] = None
-    done: threading.Event = None        # transfer finished
-    assigned: threading.Event = None    # scheduler dispatched to a channel
-
-    def __post_init__(self):
-        if self.done is None:
-            self.done = threading.Event()
-        if self.assigned is None:
-            self.assigned = threading.Event()
+    done: Completion = field(default_factory=Completion)
+    assigned: Completion = field(default_factory=Completion)
 
 
 class FunctionQueue:
@@ -123,17 +124,19 @@ class QueueEngine:
 
                 def fire(tr, item=item, q=q):
                     q.completed += 1
-                    item.done.set()
+                    item.done.succeed(tr)
 
                 item.transfer = self.pool.submit(
                     item.payload, item.direction,
                     mode=CompletionMode.INTERRUPT, on_complete=fire)
-                item.assigned.set()
+                item.assigned.succeed(item.transfer)
         return moved
 
     def wait(self, item: WorkItem, timeout: float = 60.0):
-        if not item.done.wait(timeout):
-            raise TimeoutError("work item incomplete")
+        """Block on the item's ``done`` completion (raises
+        ``cplane.CompletionTimeout``, a ``TimeoutError``), then surface
+        the transfer's result/error."""
+        item.done.wait(timeout)
         return item.transfer.result()
 
     def close(self) -> None:

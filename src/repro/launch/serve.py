@@ -16,15 +16,24 @@ decision trace).  Output is bit-exact across all of them.  The old
 
 Admission is *prefetch-pipelined* (DESIGN.md §3.3): right after a slot's
 cache is spilled cold, ``TieredStore.prefetch`` starts its asynchronous
-fetch, and the blocking ``ensure`` only happens after every admission of
-the round has prefilled — so the verbs/gather leg of slot k overlaps slot
-k+1's prefill compute and the running decode cadence instead of stalling
-it.  Over-long prompts are rejected with ``Request.failed`` set; the
+fetch — the verbs/gather leg of slot k overlaps slot k+1's prefill
+compute.  Since the completion-plane refactor (DESIGN.md §6) admission
+is also *decode-overlapped*: an admitted slot whose page is still in
+flight parks in a pending-install set instead of blocking the step, the
+batch keeps decoding resident slots, and each step installs exactly the
+slots whose fetch completion has settled (``TieredStore.fetch_ready``).
+Only when nothing is decodable does the engine block — via
+``cplane.wait_any`` over the pending fetches, waking on the *first*
+page to land rather than a fixed join order.  ``overlap=False`` restores
+the blocking-admission baseline (what ``benchmarks/overlap.py``
+measures against).  Output is bit-exact either way: a slot's tokens
+depend only on its own cache, never on when neighbours joined the
+batch.  Over-long prompts are rejected with ``Request.failed`` set; the
 engine keeps serving the rest.
 
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
-                  [--kv-paging --access-path auto]
+                  [--kv-paging --access-path auto] [--no-overlap]
 """
 from __future__ import annotations
 
@@ -33,12 +42,13 @@ import dataclasses
 import queue
 import time
 import warnings
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import cplane
 from repro.access.registry import create_path
 from repro.access.selector import PathSelector
 from repro.configs import ARCHS, get_config, reduce_for_smoke
@@ -65,7 +75,9 @@ class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4,
                  max_len: int = 256, access_path: Optional[str] = None,
                  kv_backend: Optional[str] = None,
-                 kv_nodes: int = 2, kv_doorbell: int = 4):
+                 kv_nodes: int = 2, kv_doorbell: int = 4,
+                 overlap: bool = True, overlap_grace_s: float = 0.002,
+                 kv_node_latency_s: float = 0.0):
         if kv_backend is not None:
             warnings.warn(
                 "ServeEngine(kv_backend=...) is deprecated; use "
@@ -89,6 +101,18 @@ class ServeEngine:
         # KV paging: one page per slot holding the packed prefill cache
         self.pager: Optional[TieredStore] = None
         self.access_path = access_path
+        self.overlap = overlap
+        # grace: before decoding with installs pending, give their
+        # fetches this long to settle — a fetch faster than the grace
+        # installs THIS step (degrading gracefully to the serial join),
+        # a slower one overlaps with the decode instead of blocking it
+        self.overlap_grace_s = overlap_grace_s
+        # admitted-but-nonresident slots: prefilled, spilled, fetch in
+        # flight — decode keeps running; each entry installs the step its
+        # page lands (slot -> (req, first_tok, leaves, treedef))
+        self._pending_install: Dict[int, Tuple] = {}
+        self.overlap_installs = 0       # installs that joined a settled
+        self.blocking_installs = 0      # ... vs had to block/join inline
         if access_path is not None:
             self._cache_template = T.init_cache(cfg, 1, max_len)
             page_bytes = sum(l.nbytes
@@ -97,7 +121,8 @@ class ServeEngine:
             apath = create_path(access_path, n_pages=batch_slots,
                                 page_bytes=page_bytes, n_channels=2,
                                 n_nodes=kv_nodes,
-                                doorbell_batch=kv_doorbell)
+                                doorbell_batch=kv_doorbell,
+                                node_latency_s=kv_node_latency_s)
             self.pager = TieredStore(
                 n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
                 n_hot_slots=batch_slots, path=apath)
@@ -156,18 +181,21 @@ class ServeEngine:
     def _admit(self) -> None:
         """Fill free slots from the queue (continuous batching).
 
-        Two-phase when paging: phase 1 prefills each admitted request,
-        spills its packed cache cold, and starts the page's *prefetch*;
-        phase 2 joins the fetches and installs.  Slot k's cold fetch is
-        in flight while slot k+1 is still prefilling, so paging latency
-        hides behind admission work instead of serializing after it.
+        When paging, each admitted request prefills, spills its packed
+        cache cold, and starts the page's *prefetch*; the slot then goes
+        to the pending-install set — ``_install_ready`` moves it into the
+        decode batch once (``overlap=True``) or regardless of whether
+        (``overlap=False``) its fetch has settled.  Slot k's cold fetch
+        is in flight while slot k+1 is still prefilling AND while the
+        resident batch keeps decoding, so paging latency hides behind
+        both admission work and the decode cadence.
 
         Over-long prompts are rejected (marked failed with a reason) and
         the engine keeps serving.
         """
         admitted = []            # (slot, req, first_tok, leaves/caches, def)
         for s in range(self.B):
-            if self.slot_req[s] is not None:
+            if self.slot_req[s] is not None or s in self._pending_install:
                 continue
             req = None
             while req is None:
@@ -197,22 +225,77 @@ class ServeEngine:
             if self.pager is not None:
                 leaves, treedef = jax.tree.flatten(caches1)
                 self._page_store(s, leaves)
-                admitted.append((s, req, tok, leaves, treedef))
+                self._pending_install[s] = (req, tok, leaves, treedef)
             else:
                 admitted.append((s, req, tok, caches1, None))
-        for s, req, tok, payload, treedef in admitted:
-            caches1 = payload if treedef is None else \
-                self._page_fetch(s, payload, treedef)
-            self._slot_cache_set(s, caches1)
-            self.slot_req[s] = req
-            self.slot_left[s] = req.max_new - 1
-            self.slot_pos[s] = len(req.prompt)
-            self.cur_tokens[s, 0] = tok
-            req.out_tokens.append(tok)
+        for s, req, tok, caches1, _ in admitted:    # non-paged: inline
+            self._install(s, req, tok, caches1)
+
+    def _install(self, s: int, req: Request, tok: int, caches1) -> None:
+        self._slot_cache_set(s, caches1)
+        self.slot_req[s] = req
+        self.slot_left[s] = req.max_new - 1
+        self.slot_pos[s] = len(req.prompt)
+        self.cur_tokens[s, 0] = tok
+        req.out_tokens.append(tok)
+
+    def _install_ready(self, have_active: bool) -> None:
+        """Move pending-install slots whose page fetch has settled into
+        the decode batch.
+
+        ``overlap=True``: only settled fetches install; with nothing else
+        to decode the engine blocks on ``cplane.wait_any`` across ALL
+        pending fetches — waking on the first page to land, whichever
+        path or backend it came from — and installs at least one slot so
+        the loop always progresses.  ``overlap=False`` (the serial
+        baseline): every pending slot installs now, joining its fetch
+        inline exactly like the pre-cplane two-phase admission.
+        """
+        if not self._pending_install:
+            return
+        if not self.overlap:
+            ready = sorted(self._pending_install)
+            self.blocking_installs += len(ready)
+        else:
+            pending = sorted(self._pending_install)
+            ready = [s for s in pending if self.pager.fetch_ready(s)]
+            if not ready:
+                # nothing landed yet: with other slots decodable, grant a
+                # short grace (a fast fetch installs this step, a slow
+                # one overlaps the decode); with nothing decodable, block
+                # until the FIRST page lands, whichever it is.  Only
+                # reactive handles can settle on their own — a legacy
+                # eager PendingIO never will, so waiting on one would
+                # just burn the full timeout before the inline join
+                cs = [c for s in pending
+                      if (c := self.pager.fetch_completion(s)) is not None
+                      and getattr(c, "reactive", True)]
+                if cs:
+                    try:
+                        cplane.wait_any(
+                            cs, timeout=self.overlap_grace_s
+                            if have_active else 60.0)
+                    except cplane.CompletionTimeout:
+                        pass
+                ready = [s for s in pending if self.pager.fetch_ready(s)]
+            if ready:
+                self.overlap_installs += len(ready)
+            elif not have_active:
+                # non-reactive backend (or nothing within 60s): join one
+                # fetch inline so the loop always progresses
+                ready = [pending[0]]
+                self.blocking_installs += 1
+        for s in ready:
+            req, tok, leaves, treedef = self._pending_install.pop(s)
+            caches1 = self._page_fetch(s, leaves, treedef)
+            self._install(s, req, tok, caches1)
 
     def step(self) -> int:
         """One batched decode step; returns #active slots."""
         self._admit()
+        if self.pager is not None:
+            have_active = any(r is not None for r in self.slot_req)
+            self._install_ready(have_active)
         active = [s for s in range(self.B) if self.slot_req[s] is not None]
         if not active:
             return 0
@@ -241,10 +324,27 @@ class ServeEngine:
                 self.cur_tokens[s, 0] = tok
         return len(active)
 
-    def run_until_drained(self, max_steps: int = 10000) -> None:
+    def run_until_drained(self, max_steps: int = 10000) -> int:
+        """Step until every request finishes, or ``max_steps`` runs out.
+
+        Returns the number of undrained requests (0 on a clean drain:
+        queue empty, no active slots, no pending installs).  A nonzero
+        return — the engine hit the step budget with work left — also
+        warns, instead of the old silent truncation.
+        """
         for _ in range(max_steps):
-            if self.step() == 0 and self.queue.empty():
-                return
+            if self.step() == 0 and self.queue.empty() and \
+                    not self._pending_install:
+                return 0
+        left = (self.queue.qsize()
+                + sum(r is not None for r in self.slot_req)
+                + len(self._pending_install))
+        if left:
+            warnings.warn(
+                f"run_until_drained: {left} requests still undrained "
+                f"after max_steps={max_steps}", RuntimeWarning,
+                stacklevel=2)
+        return left
 
 
 def main(argv=None) -> dict:
@@ -271,6 +371,15 @@ def main(argv=None) -> dict:
                     help="memory nodes for the verbs path")
     ap.add_argument("--kv-doorbell", type=int, default=4,
                     help="doorbell batch depth for the verbs path")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="blocking admission: join every page fetch "
+                         "before decoding (the serial baseline the "
+                         "overlap bench measures against)")
+    ap.add_argument("--kv-node-latency", type=float, default=0.0,
+                    help="modeled far-memory link RTT in seconds, paid "
+                         "once per doorbell on the verbs path (the "
+                         "in-container hop is µs where a loaded RTT is "
+                         "ms; this knob restores that regime)")
     args = ap.parse_args(argv)
 
     access = args.access_path
@@ -290,14 +399,16 @@ def main(argv=None) -> dict:
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_len=args.max_len,
                       access_path=access if paging else None,
-                      kv_nodes=args.kv_nodes, kv_doorbell=args.kv_doorbell)
+                      kv_nodes=args.kv_nodes, kv_doorbell=args.kv_doorbell,
+                      overlap=not args.no_overlap,
+                      kv_node_latency_s=args.kv_node_latency)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for r in range(args.requests):
         eng.submit(Request(rid=r, prompt=rng.integers(
             0, cfg.vocab, size=args.prompt_len).astype(np.int32),
             max_new=args.max_new))
-    eng.run_until_drained()
+    undrained = eng.run_until_drained()
     dt = time.time() - t0
     served = [r for r in eng.done if r.failed is None]
     failed = [r for r in eng.done if r.failed is not None]
@@ -308,7 +419,10 @@ def main(argv=None) -> dict:
           f"p50 latency {np.median(lat):.2f}s", flush=True)
     result = {"requests": len(served), "tokens": toks, "seconds": dt,
               "tok_per_s": toks / dt, "rejected": len(failed),
-              "access_path": eng.access_path,
+              "access_path": eng.access_path, "undrained": undrained,
+              "overlap": eng.overlap,
+              "overlap_installs": eng.overlap_installs,
+              "blocking_installs": eng.blocking_installs,
               "outputs": {r.rid: list(r.out_tokens) for r in served}}
     if eng.pager is not None:
         kv = eng.pager.stats()

@@ -27,6 +27,7 @@ so a miss set of N pages costs one setup, not N.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Optional, Protocol, Sequence, \
     runtime_checkable
@@ -36,34 +37,123 @@ import numpy as np
 from repro.core.analytical import (PathModel, doorbell_bandwidth_gbps,
                                    far_memory_path, tpu_host_path)
 from repro.core.channels import CompletionMode, Direction
+from repro.cplane import Completion, CompletionState, CompletionTimeout
 from repro.rmem.node import AddressMap, MemoryNode
 from repro.rmem.verbs import CompletionQueue, MemoryRegion, QueuePair
 
 
-class PendingIO:
-    """Handle for an in-flight batched tier operation.
+class PendingIO(Completion):
+    """Handle for an in-flight batched tier operation — a thin
+    ``cplane.Completion`` subclass.
 
     ``wait()`` blocks until the bytes have landed and returns the result —
     an ``(n, page_bytes)`` uint8 array for loads, ``None`` for stores.
     Idempotent: repeated waits return the same result.  Backends whose
     transfers complete inline (host memcpy) return already-finished
     handles, so callers pipeline uniformly over any tier.
+
+    Two construction modes:
+
+    * ``PendingIO(finalize, deps=[...])`` — *reactive*: ``deps`` are the
+      completions of the underlying work (doorbells, member IOs).  When
+      the last dep settles, this handle settles too, with the result
+      produced lazily by ``finalize`` on the first consumer — so it
+      composes with ``wait_any``/``as_completed`` and ``poll()`` answers
+      without blocking (what serve's decode/paging overlap needs).
+    * ``PendingIO(finalize)`` — legacy *eager* mode for backends that
+      cannot expose readiness: ``wait`` runs ``finalize(timeout)`` on
+      the waiting thread, exactly the old contract.
+
+    Timeouts are uniform across both modes and every backend: expiry
+    raises ``cplane.CompletionTimeout`` (a ``TimeoutError`` subclass),
+    never a backend-specific exception, and the handle stays waitable.
     """
 
-    def __init__(self, finalize: Callable[[float], Any]):
+    def __init__(self, finalize: Optional[Callable[[float], Any]] = None,
+                 deps: Optional[Sequence[Completion]] = None,
+                 source: Optional[str] = None, reactor=None,
+                 nbytes: int = 0):
+        super().__init__(source=source, reactor=reactor, nbytes=nbytes)
         self._finalize = finalize
-        self._result: Any = None
-        self._done = False
+        self._finalize_lock = threading.Lock()
+        self._deps = list(deps) if deps is not None else None
+        if self._deps is not None:
+            if not self._deps:
+                self._deps_ready()
+            else:
+                state = {"left": len(self._deps)}
+                lock = threading.Lock()
+
+                def dep_done(_c, state=state, lock=lock):
+                    with lock:
+                        state["left"] -= 1
+                        last = state["left"] == 0
+                    if last:
+                        self._deps_ready()
+                for d in self._deps:
+                    d.add_callback(dep_done)
+
+    @property
+    def reactive(self) -> bool:
+        """True when readiness propagates from deps (or the handle is
+        already settled) — i.e. ``poll``/``wait_any`` work without a
+        blocking finalize."""
+        return self._deps is not None or self.poll()
+
+    def _deps_ready(self) -> None:
+        # every dep settled: the result is producible without blocking
+        deps = self._deps or []
+        failed = any(d.state is CompletionState.ERROR for d in deps)
+        if self._finalize is None:
+            if failed:
+                self.fail(next(d.error for d in deps
+                               if d.state is CompletionState.ERROR))
+            else:
+                self.succeed(None)
+        elif failed:
+            # a dep (doorbell/member IO) errored: run the finalizer NOW
+            # (its fence won't block — deps are drained) so its cleanup
+            # runs (deferred-error clearing, CQ drain) and this handle
+            # settles ERROR — state/telemetry must not report DONE for
+            # an operation that failed
+            try:
+                result = self._run_finalize(30.0)
+            except BaseException as e:
+                self.fail(e)
+            else:               # finalizer tolerated the dep error
+                self.succeed(result)
+        else:
+            self.succeed_lazy(lambda: self._run_finalize(30.0))
+
+    def _run_finalize(self, timeout: float):
+        try:
+            return self._finalize(timeout)
+        except CompletionTimeout:
+            raise
+        except TimeoutError as e:       # backend-specific timeout shapes
+            raise CompletionTimeout(str(e)) from e
 
     def wait(self, timeout: float = 30.0):
-        if not self._done:
-            self._result = self._finalize(timeout)
-            self._done = True
-        return self._result
+        if self._deps is not None or self._finalize is None:
+            return super().wait(timeout)
+        # legacy eager mode: run the finalizer under this call's timeout;
+        # on timeout the handle stays pending (retry keeps working)
+        with self._finalize_lock:
+            if not self.poll():
+                try:
+                    result = self._run_finalize(timeout)
+                except CompletionTimeout:
+                    raise
+                except BaseException as e:
+                    self.fail(e)
+                    raise
+                self.succeed(result)
+        return self.result()
 
     @classmethod
     def ready(cls, result: Any = None) -> "PendingIO":
-        io = cls(lambda _t: result)
+        io = cls()
+        io.succeed(result)
         return io
 
 
@@ -122,11 +212,23 @@ class _AccountingMixin:
     load_batches: int = 0
     seconds_busy: float = 0.0
     projected_s: float = 0.0    # accumulated target-link projection
+    _reactor = None             # completion-plane telemetry (optional)
+    _telemetry_source: Optional[str] = None
+
+    def bind_telemetry(self, reactor, source: str) -> None:
+        """Report this tier's per-call latency/bytes into a reactor
+        source — how page-op EWMAs reach ``PathSelector``'s measured
+        scoring (DESIGN.md §6)."""
+        self._reactor = reactor
+        self._telemetry_source = source
+        reactor.register_source(source, mode="interrupt")
 
     def _account(self, nbytes: int, dt: float, is_store: bool,
                  n_ops: int = 1) -> None:
         if n_ops < 1:
             return
+        if self._reactor is not None:
+            self._reactor.record(self._telemetry_source, dt, nbytes)
         if is_store:
             self.bytes_stored += nbytes
             self.store_ops += n_ops
@@ -264,7 +366,8 @@ class RemoteBackend(_AccountingMixin):
     def __init__(self, n_pages: int, page_bytes: int,
                  nodes: Optional[Sequence[MemoryNode]] = None,
                  n_nodes: int = 1, doorbell_batch: int = 1,
-                 mode: CompletionMode = CompletionMode.POLLED):
+                 mode: CompletionMode = CompletionMode.POLLED,
+                 node_latency_s: float = 0.0):
         if n_pages < 1 or page_bytes < 1:
             raise ValueError((n_pages, page_bytes))
         self.n_pages = n_pages
@@ -273,7 +376,9 @@ class RemoteBackend(_AccountingMixin):
         self._own_nodes = nodes is None
         if nodes is None:
             per = -(-total // max(n_nodes, 1)) + 4096
-            nodes = [MemoryNode(f"memnode{i}", per) for i in range(n_nodes)]
+            nodes = [MemoryNode(f"memnode{i}", per,
+                                latency_s=node_latency_s)
+                     for i in range(n_nodes)]
         self.amap = AddressMap.striped(list(nodes), total,
                                        align=min(page_bytes, 4096))
         self.cq = CompletionQueue(mode)
@@ -281,6 +386,13 @@ class RemoteBackend(_AccountingMixin):
         self._staging = np.zeros((n_pages, page_bytes), np.uint8)
         self.mr = MemoryRegion(self._staging)
         self.doorbell_batch = doorbell_batch
+
+    def bind_telemetry(self, reactor, source: str) -> None:
+        """Point both this tier's per-call records AND the QP's doorbell
+        completions at ``source``, so the selector's measured term sees
+        outstanding verbs work as in-flight ops."""
+        super().bind_telemetry(reactor, source)
+        self.qp.bind_telemetry(reactor, source)
 
     def _check(self, page: int, nbytes: int) -> None:
         if page < 0 or page >= self.n_pages:
@@ -353,7 +465,10 @@ class RemoteBackend(_AccountingMixin):
             self.qp.raise_deferred()
             self._drain_cq()
             return None
-        return PendingIO(finalize)
+        # reactive handle: readiness propagates from the bells' own
+        # completions, so poll()/wait_any see the batch land without a
+        # blocking fence
+        return PendingIO(finalize, deps=coll.completions())
 
     def load_many(self, pages: Sequence[int]) -> np.ndarray:
         return self.load_many_async(pages).wait()
@@ -394,7 +509,8 @@ class RemoteBackend(_AccountingMixin):
             dt = (t_issued - t0) + (time.perf_counter() - t_join)
             self._account(out.nbytes, dt, is_store=False, n_ops=len(pages))
             return out
-        return PendingIO(finalize)
+        return PendingIO(finalize, deps=coll.completions(),
+                         nbytes=len(pages) * self.page_bytes)
 
     def flush(self) -> None:
         self.qp.flush()
@@ -412,6 +528,11 @@ class RemoteBackend(_AccountingMixin):
         try:
             self.qp.flush()
         finally:
+            # drop this backend's reactor sources (the QP's — possibly
+            # rebound to an adapter's ':page' name the adapter also
+            # cleans — and the explicitly-owned CQ's)
+            self.qp.close()
+            self.cq.close()
             if self._own_nodes:
                 for n in self.amap.nodes:
                     n.close()

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -32,11 +33,20 @@ from repro.rmem.verbs import OpCode, WorkRequest, _Doorbell
 class MemoryNode:
     """One far-memory server: byte pool + WR-executing worker thread."""
 
-    def __init__(self, name: str, capacity_bytes: int, device=None):
+    def __init__(self, name: str, capacity_bytes: int, device=None,
+                 latency_s: float = 0.0):
+        """``latency_s`` models the link round trip the container cannot
+        reproduce (the in-container device hop is µs where a far-memory
+        RTT under load is ms): each *doorbell batch* pays it once before
+        executing — per-doorbell, not per-WR, so batching amortizes it
+        exactly as the paper's setup-cost model says."""
         if capacity_bytes <= 0:
             raise ValueError(capacity_bytes)
+        if latency_s < 0:
+            raise ValueError(f"latency_s must be >= 0, got {latency_s}")
         self.name = name
         self.capacity_bytes = capacity_bytes
+        self.latency_s = latency_s
         self.device = device if device is not None else jax.devices()[0]
         self.pool = np.zeros(capacity_bytes, np.uint8)
         self._brk = 0                       # bump allocator watermark
@@ -87,6 +97,8 @@ class MemoryNode:
             if item is None:
                 return
             wrs, bell = item
+            if self.latency_s > 0:
+                time.sleep(self.latency_s)      # modeled link RTT
             # coalesce runs of same-opcode WRs: one staged device hop per
             # run (the doorbell amortization — N batched reads/writes cost
             # one device_put + one sync instead of N)

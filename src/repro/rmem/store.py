@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import MemoryEngine
+from repro.cplane import Completion, as_completed
 from repro.rmem.backend import LocalHostBackend, PendingIO, TierBackend
 
 # device-side row extraction for group-staged H2C fills: one compile per
@@ -229,6 +230,25 @@ class TieredStore:
         self.prefetch_issued += len(miss)
         return miss
 
+    # -- fetch readiness (the serve overlap hooks, DESIGN.md §6) ---------
+    def fetch_ready(self, page: int) -> bool:
+        """Non-blocking: would ``ensure([page])`` complete without waiting
+        on the cold tier?  True for resident pages and for prefetches
+        whose completion has settled; False while the fetch is in flight
+        (or nothing was ever started — ``ensure`` would then pay the
+        synchronous miss)."""
+        if page in self.slot_of_page:
+            return True
+        ent = self._prefetch.get(page)
+        return ent[0].poll() if ent is not None else False
+
+    def fetch_completion(self, page: int) -> Optional[Completion]:
+        """The in-flight prefetch's completion handle for ``page`` (None
+        if resident or never prefetched) — what callers hand to
+        ``cplane.wait_any`` to sleep until *any* page lands."""
+        ent = self._prefetch.get(page)
+        return ent[0] if ent is not None else None
+
     def ensure(self, pages) -> Dict[int, jax.Array]:
         """Make pages resident; returns {page: device_array}.
 
@@ -274,12 +294,23 @@ class TieredStore:
         # land (later groups keep fetching meanwhile) and split rows
         # device-side after the wait — the H2C setup is paid per group,
         # not per page; bumping _last_use at assignment keeps one batch
-        # from re-evicting a slot whose H2C is still in flight
+        # from re-evicting a slot whose H2C is still in flight.  With
+        # reactive IOs the groups are consumed in *settle order*
+        # (cplane.as_completed), so a slow first group never holds up
+        # staging of groups whose bytes already landed; legacy eager IOs
+        # fall back to submission order.
+        if groups and all(getattr(io, "reactive", False)
+                          for _, io, _ in groups):
+            by_io = {id(g[1]): g for g in groups}
+            ordered = (by_io[id(c)]
+                       for c in as_completed([io for _, io, _ in groups]))
+        else:
+            ordered = groups
         pending = []
         assigned: List[Tuple[int, int]] = []    # (page, slot) this call
         installed: set = set()                  # slots with arrays landed
         try:
-            for group_pages, io, rows in groups:
+            for group_pages, io, rows in ordered:
                 raw = io.wait()
                 slots_g = []
                 for p in group_pages:

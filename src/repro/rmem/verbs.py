@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.channels import CompletionMode
+from repro.cplane import Completion, CompletionTimeout, default_reactor
 
 
 class OpCode(enum.Enum):
@@ -90,25 +91,90 @@ class WorkCompletion:
 
 
 class CompletionQueue:
-    """Completion ring; POLLED callers poll/wait, INTERRUPT fires a callback."""
+    """Completion ring on the completion plane (DESIGN.md §6).
+
+    POLLED callers poll/wait, INTERRUPT fires a callback — unchanged.
+    Blocked consumers are now ``cplane.Completion`` waiters over the
+    ring: ``push`` satisfies them (interrupt delivery) and, in POLLED
+    mode, the waiter's own thread drives ``_satisfy`` as its completion
+    poller, so the CQ is registered with the reactor as a *polled*
+    source.  Timeouts raise ``cplane.CompletionTimeout`` (a
+    ``TimeoutError`` subclass).
+    """
+
+    _ids = itertools.count(1)
 
     def __init__(self, mode: CompletionMode = CompletionMode.POLLED,
-                 on_completion: Optional[Callable[[WorkCompletion], None]] = None):
+                 on_completion: Optional[Callable[[WorkCompletion], None]] = None,
+                 reactor=None):
         self.mode = mode
         self.on_completion = on_completion
         self._ring: deque = deque()
         self._lock = threading.Lock()
-        self._cv = threading.Condition(self._lock)
+        self._waiters: List[CompletionQueue._Waiter] = []
         self.n_completions = 0
+        self._reactor = reactor if reactor is not None else default_reactor()
+        self.source = f"verbs-cq{next(CompletionQueue._ids)}"
+        self._reactor.register_source(
+            self.source, mode="polled" if mode == CompletionMode.POLLED
+            else "interrupt")
+
+    def close(self) -> None:
+        """Drop the reactor source (telemetry for an owned CQ dies with
+        its owner — long-lived processes must not accumulate one entry
+        per queue ever constructed)."""
+        self._reactor.unregister_source(self.source)
+
+    class _Waiter:
+        """One blocked consumer: a take-predicate over the ring plus the
+        completion its thread blocks on."""
+
+        def __init__(self, cq: "CompletionQueue", n: Optional[int] = None,
+                     wr_id: Optional[int] = None):
+            self.n = n
+            self.wr_id = wr_id
+            self.got: List[WorkCompletion] = []
+            poller = cq._satisfy if cq.mode == CompletionMode.POLLED \
+                else None
+            self.completion = Completion(source=cq.source,
+                                         reactor=cq._reactor,
+                                         poller=poller)
+
+        def take(self, ring: deque) -> bool:
+            """Consume what this waiter needs from the ring (called under
+            the CQ lock); True once satisfied."""
+            if self.wr_id is None:
+                while ring and len(self.got) < self.n:
+                    self.got.append(ring.popleft())
+                return len(self.got) >= self.n
+            while ring:
+                wc = ring.popleft()
+                if wc.wr_id == self.wr_id:
+                    self.got.append(wc)
+                    return True
+            return False
 
     def push(self, wc: WorkCompletion) -> None:
-        with self._cv:
+        with self._lock:
             self._ring.append(wc)
             self.n_completions += 1
-            self._cv.notify_all()
         if self.mode == CompletionMode.INTERRUPT and \
                 self.on_completion is not None:
             self.on_completion(wc)
+        self._satisfy()
+
+    def _satisfy(self) -> None:
+        """Hand ring entries to blocked waiters, FIFO, settling every
+        waiter whose predicate is now met.  Runs from ``push`` (interrupt
+        delivery) and from polled waiters' own threads."""
+        settled = []
+        with self._lock:
+            for w in list(self._waiters):
+                if w.take(self._ring):
+                    self._waiters.remove(w)
+                    settled.append(w)
+        for w in settled:
+            w.completion.succeed(w.got if w.wr_id is None else w.got[0])
 
     def poll(self, max_entries: int = 16) -> List[WorkCompletion]:
         out = []
@@ -117,35 +183,45 @@ class CompletionQueue:
                 out.append(self._ring.popleft())
         return out
 
+    def _block_on(self, waiter: "_Waiter", timeout: float, describe) \
+            -> object:
+        with self._lock:
+            self._waiters.append(waiter)
+        self._satisfy()                 # entries may already be waiting
+        try:
+            return waiter.completion.wait(timeout)
+        except CompletionTimeout:
+            with self._lock:
+                if waiter in self._waiters:
+                    self._waiters.remove(waiter)
+            # settle the abandoned waiter so its on_submit telemetry is
+            # balanced — else every timeout inflates the source's
+            # in-flight gauge forever
+            if not waiter.completion.cancel():
+                # a racing _satisfy settled it between our timeout and
+                # the cancel: delivery won — hand over its entries
+                # rather than dropping popped completions on the floor
+                return waiter.completion.result()
+            msg = describe(waiter)
+            if waiter.got:
+                # return partially-consumed entries to the ring head so
+                # a retry (or another waiter) still sees them
+                with self._lock:
+                    self._ring.extendleft(reversed(waiter.got))
+            raise CompletionTimeout(msg) from None
+
     def wait(self, n: int = 1, timeout: float = 30.0) -> List[WorkCompletion]:
         """Block until ``n`` completions are available, then pop them."""
-        deadline = time.monotonic() + timeout
-        out: List[WorkCompletion] = []
-        with self._cv:
-            while len(out) < n:
-                while self._ring and len(out) < n:
-                    out.append(self._ring.popleft())
-                if len(out) >= n:
-                    break
-                left = deadline - time.monotonic()
-                if left <= 0 or not self._cv.wait(left):
-                    raise TimeoutError(
-                        f"CQ: {len(out)}/{n} completions before timeout")
-        return out
+        return self._block_on(
+            self._Waiter(self, n=n), timeout,
+            lambda w: f"CQ: {len(w.got)}/{n} completions before timeout")
 
     def wait_wr(self, wr_id: int, timeout: float = 30.0) -> WorkCompletion:
         """Block until the completion for ``wr_id`` arrives; pops others too
         (they stay drained — the caller asked for a specific fence)."""
-        deadline = time.monotonic() + timeout
-        with self._cv:
-            while True:
-                while self._ring:
-                    wc = self._ring.popleft()
-                    if wc.wr_id == wr_id:
-                        return wc
-                left = deadline - time.monotonic()
-                if left <= 0 or not self._cv.wait(left):
-                    raise TimeoutError(f"CQ: wr {wr_id} incomplete")
+        return self._block_on(
+            self._Waiter(self, wr_id=wr_id), timeout,
+            lambda w: f"CQ: wr {wr_id} incomplete")
 
 
 @dataclass
@@ -167,14 +243,18 @@ class _Doorbell:
 
     The signaled WR's completion is deferred until every WR of the batch
     (possibly split across nodes by the AddressMap) has executed — the
-    'only the last WR is signaled' RDMA idiom.  ``wait()`` blocks on that
-    drain directly, which is what the async backend paths fence on without
-    touching the CQ (completion-carried delivery: when the bell drains,
-    every READ's payload has already landed in its MR).
+    'only the last WR is signaled' RDMA idiom.  The fence is a
+    ``cplane.Completion`` (``self.completion``) settled from the node
+    thread on drain, so async backend paths — and heterogeneous
+    ``wait_any`` racers — fence on exactly this batch without touching
+    the CQ (completion-carried delivery: when the bell settles, every
+    READ's payload has already landed in its MR).  Its latency/bytes
+    feed the owning QP's reactor source.
     """
 
     def __init__(self, wrs: Sequence[WorkRequest], cq: CompletionQueue,
-                 on_drained: Optional[Callable[["_Doorbell"], None]] = None):
+                 on_drained: Optional[Callable[["_Doorbell"], None]] = None,
+                 reactor=None, source: Optional[str] = None):
         self.cq = cq
         self.on_drained = on_drained
         self.remaining = len(wrs)
@@ -183,7 +263,8 @@ class _Doorbell:
         self.signaled = [w for w in wrs if w.signaled]
         self.error: Optional[Exception] = None
         self._lock = threading.Lock()
-        self._drained = threading.Event()
+        self.completion = Completion(source=source, reactor=reactor,
+                                     nbytes=self.total_bytes)
 
     def wr_done(self, wr: WorkRequest, error: Optional[Exception]) -> None:
         with self._lock:
@@ -201,21 +282,25 @@ class _Doorbell:
                 nbytes=w.nbytes, batch_bytes=self.total_bytes,
                 batch_wrs=self.n_wrs, t_post=w.t_post, t_done=t_done,
                 error=self.error))
-        # QP bookkeeping (inflight count, deferred error) must settle
+        # QP bookkeeping (in-flight bells, deferred error) must settle
         # BEFORE waiters wake, or a waiter could observe — and fail to
         # clear — state that is still about to be written
         if self.on_drained is not None:
             self.on_drained(self)
-        self._drained.set()
+        if self.error is not None:
+            self.completion.fail(self.error)
+        else:
+            self.completion.succeed(None)
 
     def wait(self, timeout: float = 30.0) -> None:
         """Block until every WR of this doorbell has executed; raises the
         first WR error if any."""
-        if not self._drained.wait(timeout):
-            raise TimeoutError(
-                f"doorbell: {self.remaining}/{self.n_wrs} WRs in flight")
-        if self.error is not None:
-            raise self.error
+        try:
+            self.completion.wait(timeout)
+        except CompletionTimeout:
+            raise CompletionTimeout(
+                f"doorbell: {self.remaining}/{self.n_wrs} WRs in flight"
+            ) from None
 
 
 class QueuePair:
@@ -232,25 +317,39 @@ class QueuePair:
 
     def __init__(self, target, cq: Optional[CompletionQueue] = None,
                  doorbell_batch: int = 1,
-                 mode: CompletionMode = CompletionMode.POLLED):
+                 mode: CompletionMode = CompletionMode.POLLED,
+                 reactor=None):
         if doorbell_batch < 1:
             raise ValueError(
                 f"doorbell_batch must be >= 1, got {doorbell_batch}")
         self.target = target
+        self._own_cq = cq is None
         self.cq = cq if cq is not None else CompletionQueue(mode)
         self.doorbell_batch = doorbell_batch
         self.qpn = next(self._qpns)
         self._pending: List[WorkRequest] = []
         self._wr_ids = itertools.count(1)
-        self._inflight = 0                  # doorbells rung, not yet drained
-        self._inflight_cv = threading.Condition()
+        self._state_lock = threading.Lock()
+        self._bells: List[_Doorbell] = []   # rung, not yet drained
         self._async_error: Optional[Exception] = None
         self._collectors: List[List[_Doorbell]] = []
+        # completion-plane source: doorbell latencies/bytes feed its EWMAs
+        self._reactor = reactor if reactor is not None else default_reactor()
+        self.source = f"verbs-qp{self.qpn}"
+        self._reactor.register_source(self.source, mode="interrupt")
         # accounting (per-tier bandwidth/latency bookkeeping)
         self.bytes_written = 0
         self.bytes_read = 0
         self.doorbells = 0
         self.wrs_posted = 0
+
+    def bind_telemetry(self, reactor, source: str) -> None:
+        """Re-point doorbell telemetry at ``source`` (how an access-path
+        adapter claims this QP's in-flight/latency EWMAs)."""
+        self._reactor.unregister_source(self.source)
+        self._reactor = reactor
+        self.source = source
+        reactor.register_source(source, mode="interrupt")
 
     # -- posting ---------------------------------------------------------
     def _post(self, opcode: OpCode, mr: MemoryRegion, local_offset: int,
@@ -324,9 +423,10 @@ class QueuePair:
             w.t_post = now
         per_node = self._route(wrs)
         flat = [w for _, ws in per_node for w in ws]
-        with self._inflight_cv:
-            self._inflight += 1
-        bell = _Doorbell(flat, self.cq, on_drained=self._bell_drained)
+        bell = _Doorbell(flat, self.cq, on_drained=self._bell_drained,
+                         reactor=self._reactor, source=self.source)
+        with self._state_lock:
+            self._bells.append(bell)
         self.doorbells += 1
         for coll in self._collectors:
             coll.append(bell)
@@ -357,10 +457,16 @@ class QueuePair:
             except Exception as e:
                 # this error is reported here, to its own issuer — don't
                 # leave it deferred on the QP to poison a later fence
-                with self.qp._inflight_cv:
+                with self.qp._state_lock:
                     if self.qp._async_error is e:
                         self.qp._async_error = None
                 raise
+
+        def completions(self) -> List[Completion]:
+            """The collected bells' completion handles — what async
+            callers hand to ``cplane`` composition or ``PendingIO`` as
+            readiness deps."""
+            return [b.completion for b in self.bells]
 
     def collect_doorbells(self) -> "_BellCollector":
         return QueuePair._BellCollector(self)
@@ -369,7 +475,7 @@ class QueuePair:
         """Re-raise (once) an async error from an already-drained doorbell.
         Unsignaled WRs report failures this way — callers that skip the
         full fence still must not lose them."""
-        with self._inflight_cv:
+        with self._state_lock:
             if self._async_error is not None:
                 e, self._async_error = self._async_error, None
                 raise e
@@ -380,16 +486,18 @@ class QueuePair:
         doorbells.  Zero means ``flush()`` would be a no-op — callers use
         this to fence conditionally instead of paying an unconditional
         flush on every access."""
-        with self._inflight_cv:
-            inflight = self._inflight
+        with self._state_lock:
+            inflight = len(self._bells)
         return len(self._pending) + inflight
 
     def _bell_drained(self, bell: _Doorbell) -> None:
-        with self._inflight_cv:
+        with self._state_lock:
             if bell.error is not None and self._async_error is None:
                 self._async_error = bell.error
-            self._inflight -= 1
-            self._inflight_cv.notify_all()
+            try:
+                self._bells.remove(bell)
+            except ValueError:
+                pass
 
     # -- blocking convenience wrappers ----------------------------------
     def write(self, mr: MemoryRegion, local_offset: int, remote_addr: int,
@@ -419,24 +527,47 @@ class QueuePair:
 
         Conditional on outstanding work: with nothing pending and nothing
         in flight it only re-raises a deferred async error (if any) and
-        returns without ringing or waiting."""
+        returns without ringing or waiting.  The fence waits on every
+        in-flight bell's completion (re-snapshotting until the QP goes
+        idle, so concurrently rung bells are fenced too); a failed bell's
+        error is raised once the QP drains and cleared from the deferred
+        slot."""
         if not self._pending:
-            with self._inflight_cv:
-                idle = self._inflight == 0
+            with self._state_lock:
+                idle = not self._bells
             if idle:
                 self.raise_deferred()
                 return
         self.ring_doorbell()
         deadline = time.monotonic() + timeout
-        with self._inflight_cv:
-            while self._inflight > 0:
+        first_err: Optional[BaseException] = None
+        while True:
+            with self._state_lock:
+                bells = list(self._bells)
+            if not bells:
+                break
+            for bell in bells:
                 left = deadline - time.monotonic()
-                if left <= 0 or not self._inflight_cv.wait(left):
-                    raise TimeoutError(
-                        f"flush: {self._inflight} doorbells in flight")
+                if left <= 0:
+                    raise CompletionTimeout(
+                        f"flush: {len(bells)} doorbells in flight")
+                try:
+                    bell.completion.wait(left)
+                except CompletionTimeout:
+                    with self._state_lock:
+                        n = len(self._bells)
+                    raise CompletionTimeout(
+                        f"flush: {n} doorbells in flight") from None
+                except Exception as e:
+                    if first_err is None:
+                        first_err = e
+        with self._state_lock:
             if self._async_error is not None:
                 e, self._async_error = self._async_error, None
-                raise e
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
 
     def stats(self) -> dict:
         return {"bytes_written": self.bytes_written,
@@ -444,3 +575,18 @@ class QueuePair:
                 "wrs_posted": self.wrs_posted,
                 "doorbells": self.doorbells,
                 "completions": self.cq.n_completions}
+
+    def close(self) -> None:
+        """Drop this QP's reactor source (and its owned CQ's) so churny
+        short-lived QPs — per-checkpoint spills, bench sweeps — don't
+        accumulate telemetry entries forever.  Does NOT fence: callers
+        own their final ``flush()``."""
+        self._reactor.unregister_source(self.source)
+        if self._own_cq:
+            self.cq.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -193,6 +193,40 @@ class TestPathSelector:
             for row, page in enumerate([5, 0, 3, 1, 4, 2]):
                 np.testing.assert_array_equal(out[row], vals[page])
 
+    def test_measured_latency_steers_under_contention(self):
+        """DESIGN.md §6: once the reactor has samples, the inflation
+        term is the MEASURED queueing delay (in-flight x EWMA latency),
+        not a static occupancy guess — idle decisions stay exactly on
+        the model argmin, contended ones reroute and record
+        measured=True with the observed delay."""
+        with create_path("auto", n_pages=8, page_bytes=4096,
+                         n_channels=1, doorbell_batch=1,
+                         node_latency_s=0.05) as sel:
+            verbs = next(p for p in sel.paths if p.name == "verbs")
+            val = np.zeros(4096, np.uint8)
+            # warm every member past min_measured_samples completions
+            for p in sel.paths:
+                for page in range(4):
+                    p.write(page, val)
+                    p.read(page)
+            # idle: measured delays are all zero -> model argmin exactly
+            sel.select(4096, 1, Direction.H2C)
+            d = sel.decisions[-1]
+            assert not d.measured and d.observed == {}
+            assert d.chosen == d.model_argmin == "verbs"
+            # contend verbs: eight 50ms-RTT doorbells in flight
+            io = verbs.write_many_async(list(range(8)), [val] * 8)
+            try:
+                assert verbs.backend.qp.outstanding_wrs > 0
+                got = sel.select(4096, 1, Direction.H2C)
+                d = sel.decisions[-1]
+                assert d.measured
+                assert d.observed["verbs"] > 0      # the observed value
+                assert d.model_argmin == "verbs"    # prior still audits
+                assert got.name != "verbs"          # measured rerouted
+            finally:
+                io.wait(30.0)
+
     def test_occupancy_penalty_steers_selection(self):
         with self._selector() as sel:
             nbytes = 1 << 20

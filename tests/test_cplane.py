@@ -1,0 +1,358 @@
+"""Completion-plane tests (DESIGN.md §6).
+
+The contract under every async primitive in the repo: settle-once
+states, timeouts/deadlines/cancellation, callbacks, heterogeneous
+composition (channel Transfer + verbs doorbell + tier PendingIO raced
+in ONE wait_any), reactor telemetry, and the four legacy surfaces
+(Transfer.wait / WorkItem.done / PendingIO.wait / _Doorbell.wait /
+CompletionQueue.wait) all being served by repro.cplane.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import cplane
+from repro.cplane import (Completion, CompletionCancelled, CompletionState,
+                          CompletionTimeout, Reactor, as_completed,
+                          wait_all, wait_any)
+from repro.core.channels import ChannelPool, Direction
+from repro.core.queues import QueueEngine, WorkItem
+from repro.rmem import (LocalHostBackend, MemoryNode, MemoryRegion,
+                        PendingIO, QueuePair, RemoteBackend)
+
+
+def _settle_later(c: Completion, dt: float, result=None):
+    t = threading.Thread(target=lambda: (time.sleep(dt),
+                                         c.succeed(result)), daemon=True)
+    t.start()
+    return t
+
+
+class TestCompletion:
+    def test_states_and_result_idempotent(self):
+        c = Completion()
+        assert c.state is CompletionState.PENDING
+        assert not c.poll()
+        assert c.succeed(41)
+        assert not c.succeed(99)            # settle exactly once
+        assert c.state is CompletionState.DONE
+        assert c.wait(0.1) == 41
+        assert c.result() == 41             # idempotent
+
+    def test_error_raises_from_wait_and_result(self):
+        c = Completion.failed(IOError("boom"))
+        assert c.state is CompletionState.ERROR
+        with pytest.raises(IOError, match="boom"):
+            c.wait(0.1)
+        with pytest.raises(IOError, match="boom"):
+            c.result()
+
+    def test_result_before_settle_raises(self):
+        with pytest.raises(RuntimeError, match="not settled"):
+            Completion().result()
+
+    def test_wait_timeout_is_timeouterror_subclass(self):
+        c = Completion()
+        with pytest.raises(CompletionTimeout):
+            c.wait(0.02)
+        with pytest.raises(TimeoutError):   # legacy except-clauses hold
+            c.wait(0.02)
+        assert c.state is CompletionState.PENDING   # still waitable
+        c.succeed("late")
+        assert c.wait(0.1) == "late"
+
+    def test_cancellation(self):
+        c = Completion()
+        assert c.cancel()
+        assert c.state is CompletionState.CANCELLED
+        with pytest.raises(CompletionCancelled):
+            c.wait(0.1)
+        assert not c.cancel()               # second cancel lost the race
+        d = Completion.done(1)
+        assert not d.cancel()               # settled completions can't
+        assert d.result() == 1
+
+    def test_deadline_expiry(self):
+        c = Completion(deadline=time.monotonic() + 0.03)
+        t0 = time.monotonic()
+        with pytest.raises(CompletionTimeout, match="deadline"):
+            c.wait(5.0)                     # deadline wins over timeout
+        assert time.monotonic() - t0 < 1.0
+
+    def test_callback_after_done_fires_immediately(self):
+        c = Completion.done("x")
+        seen = []
+        c.add_callback(lambda comp: seen.append(comp.result()))
+        assert seen == ["x"]
+
+    def test_callback_fires_on_settle_from_producer_thread(self):
+        c = Completion()
+        seen = []
+        c.add_callback(lambda comp: seen.append(comp.state))
+        _settle_later(c, 0.01).join()
+        assert seen == [CompletionState.DONE]
+
+    def test_lazy_result_runs_on_consumer(self):
+        ran = []
+        c = Completion()
+        c.succeed_lazy(lambda: ran.append(1) or "lazy")
+        assert c.poll() and not ran         # settled, not yet produced
+        assert c.wait(0.1) == "lazy"
+        assert c.result() == "lazy" and ran == [1]   # produced once
+
+
+class TestComposition:
+    def test_wait_any_returns_first_settlers(self):
+        fast, slow = Completion(), Completion()
+        _settle_later(fast, 0.01, "fast")
+        done = wait_any([slow, fast], timeout=5.0)
+        assert done == [fast]
+        slow.succeed("slow")
+
+    def test_wait_any_timeout(self):
+        with pytest.raises(CompletionTimeout):
+            wait_any([Completion()], timeout=0.02)
+
+    def test_wait_all_results_in_input_order(self):
+        cs = [Completion() for _ in range(3)]
+        for i, c in enumerate(cs):
+            _settle_later(c, 0.005 * (3 - i), i)
+        assert wait_all(cs, timeout=5.0) == [0, 1, 2]
+
+    def test_as_completed_yields_in_settle_order(self):
+        a, b = Completion(), Completion()
+        _settle_later(b, 0.005, "b")
+        _settle_later(a, 0.05, "a")
+        order = [c.result() for c in as_completed([a, b], timeout=5.0)]
+        assert order == ["b", "a"]
+
+    def test_wait_any_heterogeneous_transfer_doorbell_pendingio(self):
+        """The tentpole claim: a channel Transfer, a verbs doorbell and a
+        tier PendingIO race in ONE wait_any."""
+        node = MemoryNode("hetero", 1 << 20)
+        qp = QueuePair(node, doorbell_batch=8)
+        mr = MemoryRegion(np.ones(4096, np.uint8))
+        addr = node.alloc(4096)
+        backend = LocalHostBackend(4, 256)
+        pool = ChannelPool(2)
+        try:
+            qp.post_write(mr, 0, addr, 4096)
+            bell = qp.ring_doorbell()
+            tr = pool.h2c(np.ones(1024, np.float32))
+            io = backend.load_many_async([0, 2])    # settles inline
+            everything = [bell.completion, tr, io]
+            # all three producers settle; drain them through one plane
+            remaining = list(everything)
+            for c in as_completed(list(everything), timeout=10.0):
+                remaining.remove(c)
+            assert remaining == []
+            assert io.wait(1.0).shape == (2, 256)
+            tr.wait(1.0)
+            bell.wait(1.0)
+        finally:
+            pool.close()
+            node.close()
+
+    def test_doorbell_completion_races_in_wait_any(self):
+        node = MemoryNode("race", 1 << 20, latency_s=0.03)
+        qp = QueuePair(node, doorbell_batch=1)
+        mr = MemoryRegion(np.zeros(512, np.uint8))
+        addr = node.alloc(512)
+        try:
+            with qp.collect_doorbells() as coll:
+                qp.post_write(mr, 0, addr, 512)     # batch=1: auto-rings
+            (bell_c,) = coll.completions()
+            assert not bell_c.poll()                # RTT still running
+            done = wait_any([bell_c, Completion()], timeout=5.0)
+            assert done == [bell_c]
+        finally:
+            node.close()
+
+
+class TestPendingIOTimeout:
+    def test_legacy_finalize_timeout_raises_completion_timeout(self):
+        """Uniform satellite contract: whatever TimeoutError shape the
+        backend's fence raises, PendingIO.wait surfaces a single
+        cplane.CompletionTimeout — and stays waitable for a retry."""
+        calls = []
+
+        def finalize(timeout):
+            calls.append(timeout)
+            if len(calls) == 1:
+                raise TimeoutError("backend-specific shape")
+            return "eventually"
+
+        io = PendingIO(finalize)
+        with pytest.raises(CompletionTimeout):
+            io.wait(0.01)
+        assert io.wait(1.0) == "eventually"         # retry succeeded
+
+    def test_reactive_deps_timeout_raises_completion_timeout(self):
+        never = Completion()
+        io = PendingIO(lambda t: "x", deps=[never])
+        assert io.reactive and not io.poll()
+        with pytest.raises(CompletionTimeout):
+            io.wait(0.02)
+        never.succeed(None)
+        assert io.wait(1.0) == "x"
+
+    def test_remote_backend_timeout_uniform(self):
+        """A clogged node makes the fetch miss its budget: the raised
+        type is cplane.CompletionTimeout, not a verbs-specific shape."""
+        node = MemoryNode("slowpoke", (1 << 21) + (1 << 15),
+                          latency_s=0.2)
+        be = RemoteBackend(n_pages=2, page_bytes=4096, nodes=[node])
+        try:
+            io = be.load_many_async([0, 1])
+            with pytest.raises(CompletionTimeout):
+                io.wait(0.01)
+            io.wait(5.0)                            # still joinable
+        finally:
+            be.close()
+            node.close()
+
+    def test_failed_dep_settles_reactive_handle_as_error(self):
+        """A doorbell/member failure must be visible in the handle's
+        STATE (and telemetry), not only at result() — a failed fetch
+        reported as DONE would mislead wait_any racers and health
+        counters."""
+        dep = Completion.failed(IOError("wr failed"))
+
+        def finalize(_t):
+            raise IOError("wr failed")
+        io = PendingIO(finalize, deps=[dep])
+        assert io.poll()
+        assert io.state is CompletionState.ERROR
+        with pytest.raises(IOError, match="wr failed"):
+            io.wait(0.1)
+
+    def test_unregistered_source_not_resurrected(self):
+        """Late settles/records after the owner unregistered must not
+        re-create the source entry (unbounded telemetry growth)."""
+        r = Reactor()
+        r.register_source("gone")
+        c = r.completion("gone")
+        r.unregister_source("gone")
+        c.succeed(None)                     # straggler settle
+        r.record("gone", 0.001, nbytes=8)   # straggler sync sample
+        assert r.stats_for("gone") is None
+
+    def test_ready_and_legacy_error_settles(self):
+        assert PendingIO.ready(7).wait(0.01) == 7
+
+        def boom(_t):
+            raise IOError("fetch failed")
+        io = PendingIO(boom)
+        with pytest.raises(IOError):
+            io.wait(0.1)
+        with pytest.raises(IOError):
+            io.wait(0.1)                            # error is sticky
+
+
+class TestWorkItem:
+    def test_default_factory_builds_completions(self):
+        """Satellite: no __post_init__ None-dance — the dataclass fields
+        ARE completions from construction."""
+        item = WorkItem(payload=np.zeros(4), direction=Direction.H2C)
+        assert isinstance(item.done, Completion)
+        assert isinstance(item.assigned, Completion)
+        assert not item.done.poll() and not item.assigned.poll()
+        other = WorkItem(payload=None, direction=Direction.C2H)
+        assert item.done is not other.done          # per-instance events
+
+    def test_queue_engine_waits_through_cplane(self):
+        with QueueEngine(n_channels=1) as qe:
+            qe.create_queue("q")
+            item = qe.submit("q", np.full(64, 3.0, np.float32),
+                             Direction.H2C)
+            out = qe.wait(item, timeout=30.0)
+            assert float(np.asarray(out)[0]) == 3.0
+            assert item.assigned.poll() and item.done.poll()
+
+    def test_queue_engine_wait_timeout_type(self):
+        item = WorkItem(payload=None, direction=Direction.H2C)
+        with QueueEngine(n_channels=1) as qe:
+            with pytest.raises(CompletionTimeout):
+                qe.wait(item, timeout=0.02)         # never enqueued
+
+
+class TestReactorTelemetry:
+    def test_counters_and_inflight_gauge(self):
+        r = Reactor(ewma_alpha=0.5)
+        r.register_source("src", mode="interrupt")
+        c1 = r.completion("src", nbytes=100)
+        c2 = r.completion("src", nbytes=300)
+        st = r.stats_for("src")
+        assert st.submitted == 2 and st.inflight == 2
+        c1.succeed(None)
+        st = r.stats_for("src")
+        assert st.completed == 1 and st.inflight == 1
+        assert st.ewma_latency_s > 0
+        c2.fail(IOError("x"))
+        st = r.stats_for("src")
+        assert st.completed == 2 and st.inflight == 0 and st.errors == 1
+        assert st.bytes_moved == 400
+
+    def test_record_one_shot_sample(self):
+        r = Reactor()
+        r.register_source("sync")
+        r.record("sync", 0.001, nbytes=512)
+        r.record("sync", 0.003, nbytes=512)
+        st = r.stats_for("sync")
+        assert st.submitted == st.completed == 2
+        assert st.inflight == 0
+        assert 0.001 < st.ewma_latency_s < 0.003    # EWMA between samples
+        assert st.ewma_gbps > 0
+
+    def test_channel_pool_feeds_private_reactor(self):
+        r = Reactor()
+        pool = ChannelPool(2, reactor=r, source="mypool")
+        try:
+            trs = [pool.h2c(np.ones(256, np.float32)) for _ in range(3)]
+            wait_all(trs, timeout=30.0)
+            st = r.stats_for("mypool")
+            assert st.submitted == 3 and st.completed == 3
+            assert st.bytes_moved == 3 * 1024
+            assert st.ewma_latency_s > 0
+        finally:
+            pool.close()
+        assert r.stats_for("mypool") is None        # unregistered on close
+
+    def test_telemetry_snapshot_shape(self):
+        r = Reactor()
+        r.register_source("a")
+        r.record("a", 0.001, nbytes=10)
+        snap = r.telemetry()
+        assert set(snap) == {"a"}
+        for key in ("mode", "submitted", "completed", "inflight",
+                    "ewma_latency_s", "ewma_gbps", "bytes_moved"):
+            assert key in snap["a"]
+
+    def test_record_does_not_erode_async_inflight(self):
+        """A source shared between async completions and sync record()
+        samples (the verbs ':page' source) must keep its genuine
+        in-flight count — record() nets to zero on the gauge."""
+        r = Reactor()
+        r.register_source("shared")
+        c = r.completion("shared")          # one genuinely in flight
+        for _ in range(5):
+            r.record("shared", 0.001, nbytes=64)
+        assert r.stats_for("shared").inflight == 1
+        c.succeed(None)
+        assert r.stats_for("shared").inflight == 0
+
+    def test_repeated_bounded_wait_any_leaves_no_callbacks(self):
+        """Serve's per-step grace polls wait_any on the SAME pending
+        completions; timed-out waits must deregister their waiter."""
+        c = Completion()
+        for _ in range(5):
+            with pytest.raises(CompletionTimeout):
+                wait_any([c], timeout=0.002)
+        assert len(c._callbacks) == 0
+        c.succeed("late")
+        assert wait_any([c], timeout=1.0) == [c]
+
+    def test_default_reactor_is_process_wide(self):
+        assert cplane.default_reactor() is cplane.default_reactor()

@@ -54,6 +54,44 @@ def test_serve_engine_drains_requests():
     assert out["tok_per_s"] > 0
 
 
+def test_run_until_drained_returns_undrained_count():
+    """Satellite: hitting max_steps with work left warns and returns the
+    number of undrained requests instead of silently truncating."""
+    import pytest
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import transformer as T
+    cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+    params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(0))
+    eng = serve_mod.ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    rng = np.random.default_rng(0)
+    for r in range(3):
+        eng.submit(serve_mod.Request(
+            rid=r, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+            max_new=4))
+    with pytest.warns(RuntimeWarning, match="undrained"):
+        left = eng.run_until_drained(max_steps=2)
+    assert left >= 1
+    assert eng.run_until_drained() == 0         # finishing works
+    assert len(eng.done) == 3
+
+
+def test_serve_overlap_bit_exact_with_serial_baseline():
+    """Decode/paging overlap changes WHEN slots join the batch, never
+    what they decode: outputs match the blocking-admission baseline
+    token for token, on a paged path with modeled fetch latency."""
+    args = ["--arch", "qwen2-0.5b", "--smoke", "--requests", "5",
+            "--slots", "2", "--max-new", "6", "--prompt-len", "8",
+            "--max-len", "64", "--access-path", "verbs",
+            "--kv-node-latency", "0.02"]
+    over = serve_mod.main(args)
+    serial = serve_mod.main(args + ["--no-overlap"])
+    assert over["outputs"] == serial["outputs"]
+    assert over["undrained"] == serial["undrained"] == 0
+    assert over["overlap"] and not serial["overlap"]
+    assert over["overlap_installs"] + over["blocking_installs"] == 5
+    assert serial["blocking_installs"] == 5
+
+
 def test_serve_continuous_batching_reuses_slots():
     from repro.configs import get_config, reduce_for_smoke
     from repro.models import transformer as T
