@@ -12,8 +12,8 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (completion_modes, contention, e2e_step, far_memory,
-                        host_device_bw, offload_step, overlap,
+from benchmarks import (completion_modes, contention, e2e_step, fabric,
+                        far_memory, host_device_bw, offload_step, overlap,
                         rdma_analogue, vmem_stream)
 
 MODULES = [
@@ -25,6 +25,7 @@ MODULES = [
     ("tab1_offload_step", offload_step),
     ("farmem_tier_sweep", far_memory),
     ("serve_overlap", overlap),
+    ("fabric_sweep", fabric),
     ("e2e_and_roofline", e2e_step),
 ]
 
@@ -41,11 +42,16 @@ def main(argv=None) -> None:
     ap.add_argument("--select-json", default="",
                     help="path-selection sweep JSON path (farmem module); "
                          "defaults to BENCH_path_select.json with --smoke")
+    ap.add_argument("--fabric-json", default="",
+                    help="fabric sweep JSON path (fabric module); "
+                         "defaults to BENCH_fabric.json with --smoke")
     args = ap.parse_args(argv)
     quick = args.quick or args.smoke
     json_out = args.json or ("BENCH_miss_pipeline.json" if args.smoke
                              else "")
     select_out = args.select_json or ("BENCH_path_select.json"
+                                      if args.smoke else "")
+    fabric_out = args.fabric_json or ("BENCH_fabric.json"
                                       if args.smoke else "")
 
     print("name,us_per_call,derived")
@@ -57,6 +63,8 @@ def main(argv=None) -> None:
         try:
             if (json_out or select_out) and mod is far_memory:
                 mod.run(quick=quick, out=json_out, select_out=select_out)
+            elif fabric_out and mod is fabric:
+                mod.run(quick=quick, out=fabric_out)
             else:
                 mod.run(quick=quick)
         except Exception:

@@ -14,6 +14,9 @@ Registered by default:
     verbs  — one-sided verbs onto far-memory nodes
     auto   — ``PathSelector`` over the above (page-backed members when
              geometry is given, stage-only xdma+qdma members otherwise)
+    fabric — ``fabric.ShardedPath``: consistent-hash sharding +
+             replication over N homogeneous members (``shards=``,
+             ``replicas=``, ``member=`` name any path above)
 
 Custom paths register with ``DEFAULT_REGISTRY.register(name, factory)``
 — the extension point the roadmap's multi-backend work builds on.
@@ -88,6 +91,17 @@ def _auto_factory(n_pages: int = 0, page_bytes: int = 0,
 
 
 DEFAULT_REGISTRY.register("auto", _auto_factory)
+
+
+def _fabric_factory(**kw) -> MemoryPath:
+    """Sharded memory fabric over N member paths (lazy import: the
+    fabric package builds ON the access layer, so importing it at this
+    module's top would cycle)."""
+    from repro.fabric import create_fabric
+    return create_fabric(**kw)
+
+
+DEFAULT_REGISTRY.register("fabric", _fabric_factory)
 
 
 def create_path(name: str, **kw) -> MemoryPath:

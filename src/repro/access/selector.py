@@ -150,6 +150,18 @@ class PathSelector(TierBackendCompat):
         (static occupancy inflation when unmeasured)."""
         return self._score_path(path, nbytes, batch, direction, stage)[0]
 
+    def rank(self, candidates: Sequence[MemoryPath], nbytes: int,
+             batch: int = 1, direction: Direction = Direction.C2H,
+             stage: bool = False) -> List[MemoryPath]:
+        """Candidates ordered best-first by the same scoring formula
+        ``select`` minimizes — the per-member hook the sharded fabric
+        uses to pick a read replica (a congested shard sinks in the
+        ranking without any placement changing), with no decision
+        recorded since nothing is being placed."""
+        cands = list(candidates)
+        return sorted(cands, key=lambda p: self._score_path(
+            p, nbytes, batch, direction, stage)[0])
+
     def select(self, nbytes: int, batch: int = 1,
                direction: Direction = Direction.C2H, op: str = "write",
                stage: bool = False,

@@ -1,0 +1,180 @@
+"""``FabricManager``: the fabric's control plane (DESIGN.md §7).
+
+The data plane (``ShardedPath``) routes; the manager decides *when the
+routing must change* and executes the change online:
+
+* **health** — every member is a reactor telemetry source (registered
+  by the fabric); the manager watches per-member completion-latency
+  EWMAs and flags members running ``threshold``× slower than the fleet
+  median, reusing the ``runtime.fault.StragglerMonitor`` EWMA shape for
+  explicitly-fed samples.  A flagged member can be failed over exactly
+  like a dead one — the paper's "route around the slow endpoint".
+* **failure** — ``fail_node`` fail-stops a member at the routing plane
+  (reads fail over to replicas instantly), then *repairs*: a
+  ``plan_rebalance`` diff against the survivor ring names every page
+  replica the failure destroyed, and the copies run through the PR-2
+  batched miss pipeline (``read_many_async`` per surviving source,
+  ``write_many_async`` per destination, all overlapped) before the
+  survivor ring commits.
+* **scale-out** — ``rebalance(add=[path])`` attaches new members,
+  copies only the ~1/N of pages whose owner set changes (the
+  consistent-hash guarantee), then flips the ring: copy-then-flip, so
+  every read before the flip is served by the old placement and every
+  read after it by a fully-populated new one.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List, Sequence
+
+from repro.access.path import MemoryPath
+from repro.cplane import wait_all
+from repro.fabric.placement import RebalancePlan, plan_rebalance
+from repro.fabric.sharded_path import FabricUnavailable, ShardedPath
+from repro.runtime.fault import StragglerMonitor
+
+
+class FabricDataLoss(RuntimeError):
+    """A membership change would orphan pages with no surviving replica."""
+
+
+class FabricManager:
+    """Health, failover and online rebalancing over a ``ShardedPath``."""
+
+    def __init__(self, fabric: ShardedPath,
+                 straggler_threshold: float = 2.5, warmup: int = 3,
+                 ewma_alpha: float = 0.2, reactor=None):
+        self.fabric = fabric
+        self.reactor = reactor if reactor is not None else fabric.reactor
+        self.straggler_threshold = straggler_threshold
+        self.warmup = warmup
+        # explicit-feed monitors (fault.StragglerMonitor EWMAs), one per
+        # member, for callers that time their own fabric ops
+        self.monitors: Dict[str, StragglerMonitor] = {
+            n: StragglerMonitor(threshold=straggler_threshold,
+                                alpha=ewma_alpha, warmup=warmup)
+            for n in fabric.member_names}
+        self.suspects: List[str] = []
+        self.repairs: List[dict] = []
+
+    # -- health ----------------------------------------------------------
+    def record(self, member: str, seconds: float, step: int = 0) -> bool:
+        """Feed one observed op latency for ``member``; returns True if
+        it is a straggler against that member's own EWMA baseline."""
+        mon = self.monitors.setdefault(
+            member, StragglerMonitor(threshold=self.straggler_threshold,
+                                     warmup=self.warmup))
+        slow = mon.record(step, seconds)
+        if slow and member not in self.suspects:
+            self.suspects.append(member)
+        return slow
+
+    def check_health(self) -> List[str]:
+        """Cross-member check from the reactor telemetry the fabric
+        records per member: members whose completion-latency EWMA runs
+        ``threshold``× above the fleet median (with enough samples to
+        trust it) are flagged as stragglers."""
+        lats = {}
+        for n in self.fabric.alive_members():
+            st = self.reactor.stats_for(self.fabric.source_of(n))
+            if st is not None and st.completed >= self.warmup:
+                lats[n] = st.ewma_latency_s
+        if len(lats) < 2:
+            return []
+        med = statistics.median(lats.values())
+        flagged = [n for n, lat in sorted(lats.items())
+                   if lat > self.straggler_threshold * max(med, 1e-12)]
+        for n in flagged:
+            if n not in self.suspects:
+                self.suspects.append(n)
+        return flagged
+
+    # -- plan execution (copy-then-flip) ---------------------------------
+    def _execute(self, plan: RebalancePlan) -> dict:
+        """Run a plan's copies through the batched miss pipeline: one
+        ``read_many_async`` per source member and one
+        ``write_many_async`` per destination, everything in flight
+        together, joined with ``wait_all`` — then the caller flips the
+        ring.  Dirty/holder bytes are re-fetched from the cold tier
+        itself, never from a consumer's device copy."""
+        t0 = time.perf_counter()
+        by_src: Dict[str, List[int]] = {}
+        for mv in plan.moves:
+            # first listed source is the surviving primary
+            by_src.setdefault(mv.srcs[0], []).append(mv.page)
+        reads = {src: (sorted(set(pages)),
+                       self.fabric.member(src).read_many_async(
+                           sorted(set(pages))))
+                 for src, pages in by_src.items()}
+        page_bytes: Dict[int, object] = {}
+        for src, (pages, io) in reads.items():
+            rows = io.wait()
+            for i, p in enumerate(pages):
+                page_bytes[p] = rows[i]
+        by_dst: Dict[str, List[int]] = {}
+        for mv in plan.moves:
+            by_dst.setdefault(mv.dst, []).append(mv.page)
+        writes = [self.fabric.member(dst).write_many_async(
+                      pages, [page_bytes[p] for p in pages])
+                  for dst, pages in by_dst.items()]
+        wait_all(writes)
+        copied = sum(len(ps) for ps in by_dst.values())
+        self.fabric.pages_moved += plan.moved_pages
+        stats = {**plan.stats(), "copies_executed": copied,
+                 "seconds": time.perf_counter() - t0}
+        self.repairs.append(stats)
+        return stats
+
+    def _plan(self, new_members: Sequence[str],
+              strict: bool = True) -> RebalancePlan:
+        plan = plan_rebalance(self.fabric.ring, new_members,
+                              self.fabric.written_pages,
+                              alive=self.fabric.alive_members())
+        if strict and plan.lost:
+            raise FabricDataLoss(
+                f"{len(plan.lost)} pages have no surviving replica "
+                f"(e.g. {list(plan.lost)[:4]}); replication factor "
+                f"{self.fabric.ring.replicas} cannot cover this change")
+        return plan
+
+    # -- membership changes ----------------------------------------------
+    def fail_node(self, name: str, strict: bool = True) -> dict:
+        """Fail-stop ``name`` and repair: reads fail over to replicas
+        the moment the member is marked, then every replica the failure
+        destroyed is re-created on the survivor ring from surviving
+        sources, and the survivor ring commits.  On ``FabricDataLoss``
+        the member STAYS failed (it is dead either way) and no repair
+        runs — the orphaned pages are named in the exception."""
+        self.fabric.mark_failed(name)
+        survivors = [m for m in self.fabric.ring.members if m != name]
+        plan = self._plan(survivors, strict=strict)
+        stats = self._execute(plan)
+        self.fabric.commit_ring(self.fabric.ring.with_members(survivors))
+        stats["failed_member"] = name
+        return stats
+
+    kill = fail_node                        # the serve/bench spelling
+
+    def rebalance(self, add: Sequence[MemoryPath] = (),
+                  remove: Sequence[str] = (), strict: bool = True) -> dict:
+        """Online membership change: attach ``add`` members (not yet
+        routable), plan the diff, copy every new replica while the old
+        ring keeps serving, then flip."""
+        added = [self.fabric.add_member(p) for p in add]
+        new_members = [m for m in self.fabric.ring.members
+                       if m not in set(remove)] + added
+        if not new_members:
+            raise FabricUnavailable("rebalance would empty the fabric")
+        plan = self._plan(new_members, strict=strict)
+        stats = self._execute(plan)
+        self.fabric.commit_ring(self.fabric.ring.with_members(new_members))
+        stats["added"] = added
+        stats["removed"] = list(remove)
+        return stats
+
+    def stats(self) -> dict:
+        return {"suspects": list(self.suspects),
+                "repairs": list(self.repairs),
+                "epoch": self.fabric.epoch,
+                "failed": self.fabric.failed_members}

@@ -1,0 +1,469 @@
+"""``ShardedPath``: the sharded memory fabric is itself a ``MemoryPath``.
+
+The fabric distributes one page address space over N member paths —
+each member a full ``MemoryPath`` (an XDMA/QDMA host pool, a verbs
+far-memory node, or even a nested ``PathSelector``) — and presents the
+union as a single path, so every existing consumer (``TieredStore``,
+``MemoryEngine``, checkpoints, serve) works over it unchanged:
+
+* **placement** — a ``HashRing`` (``fabric.placement``) maps each page
+  to R distinct owner members; writes replicate to every alive owner,
+  reads are served by the best-scored alive replica (per-member
+  ``PathSelector`` scoring, so one congested or failed shard reroutes
+  without repinning the fabric);
+* **batched fan-out** — ``write_many_async``/``read_many_async`` split
+  a batch into one per-member sub-batch each, issue them all before
+  waiting, and compose the member ``PendingIO``s into one handle whose
+  deps are the member completions — per-shard doorbells stay batched,
+  cross-shard operations overlap, and the composite stays
+  ``wait_any``/``as_completed``-composable (what serve's overlap and
+  the miss pipeline need);
+* **quorum reads** — ``read_quorum`` races one read per alive owner
+  via ``cplane.as_completed`` and returns as soon as a majority of
+  replicas agree bit-for-bit (mismatch raises — a torn replica must
+  never be served silently);
+* **membership epochs** — every membership change (failure, ring flip)
+  bumps ``epoch`` and stamps it down into member backends'
+  ``AddressMap``s and ``MemoryNode``s, so any layer can detect stale
+  routing against the fabric's current view.
+
+Failure is fail-stop at the routing plane: ``mark_failed`` removes a
+member from every owner set immediately (reads fail over to replicas,
+writes degrade to the surviving owners); re-replication and ring
+repair are the control plane's job (``fabric.manager.FabricManager``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.access.path import (MemoryPath, PathCapabilities,
+                               TierBackendCompat, unified_stats)
+from repro.access.selector import PathSelector
+from repro.core.channels import Direction, Transfer
+from repro.cplane import as_completed, default_reactor, wait_all
+from repro.fabric.placement import HashRing, PlacementPolicy
+from repro.rmem.backend import PendingIO
+
+
+class FabricUnavailable(RuntimeError):
+    """No alive replica can serve the request (all owners failed)."""
+
+
+class QuorumError(RuntimeError):
+    """Replica disagreement (or too few survivors) on a quorum read."""
+
+
+class ShardedPath(TierBackendCompat):
+    """One ``MemoryPath`` over N member paths with replicated placement."""
+
+    name = "fabric"
+
+    def __init__(self, members: Sequence[MemoryPath], replicas: int = 1,
+                 policy: Optional[PlacementPolicy] = None, vnodes: int = 64,
+                 reactor=None):
+        members = list(members)
+        if not members:
+            raise ValueError("ShardedPath needs at least one member")
+        if not 1 <= replicas <= len(members):
+            raise ValueError(f"replicas={replicas} must be in "
+                             f"[1, {len(members)}]")
+        geoms = {(m.n_pages, m.page_bytes) for m in members}
+        if len(geoms) != 1:
+            raise ValueError(f"members disagree on page geometry: {geoms}")
+        self.n_pages, self.page_bytes = geoms.pop()
+        # shard-qualify member names AFTER validation (a rejected ctor
+        # must not leave callers' paths renamed): the ring, the scorer
+        # and the stats all key on these, and two verbs members would
+        # otherwise collide
+        names: List[str] = []
+        for i, m in enumerate(members):
+            m.name = f"{m.name}/s{i}"
+            names.append(m.name)
+        self.replicas = replicas
+        self._members: Dict[str, MemoryPath] = dict(zip(names, members))
+        self.ring: PlacementPolicy = policy if policy is not None else \
+            HashRing(names, replicas=replicas, vnodes=vnodes)
+        self.epoch = 0
+        self._failed: set = set()
+        self._written: set = set()          # pages the fabric holds
+        self._lock = threading.Lock()
+        self.reactor = reactor if reactor is not None else default_reactor()
+        # fabric-level per-member telemetry: every member is a reactor
+        # source the manager's health checks (and benches) read
+        stem = self.reactor.unique_source(self.name)
+        self._sources = {}
+        for n in names:
+            src = f"{stem}:{n}"
+            self.reactor.register_source(src, mode="interrupt")
+            self._sources[n] = src
+        # per-member scoring: a PathSelector reused purely as the scorer
+        # (measured EWMA + occupancy per member), never for placement
+        self._scorer = PathSelector(members, reactor=self.reactor)
+        self.replicated_writes = 0          # extra replica copies written
+        self.failovers = 0                  # reads served off-primary
+        self.quorum_reads = 0
+        self.rebalances = 0
+        self.pages_moved = 0
+        self._closed = False
+
+    # -- membership ------------------------------------------------------
+    @property
+    def member_names(self) -> List[str]:
+        return list(self._members)
+
+    def member(self, name: str) -> MemoryPath:
+        return self._members[name]
+
+    def alive_members(self) -> List[str]:
+        return [n for n in self._members if n not in self._failed]
+
+    @property
+    def failed_members(self) -> List[str]:
+        return sorted(self._failed)
+
+    @property
+    def written_pages(self) -> List[int]:
+        with self._lock:
+            return sorted(self._written)
+
+    def source_of(self, name: str) -> str:
+        """The reactor telemetry source for one member."""
+        return self._sources[name]
+
+    def _bump_epoch(self) -> None:
+        self.epoch += 1
+        # stamp the new membership epoch down into every member's
+        # address map / memory nodes (where the member has them), so a
+        # stale router is detectable at any layer
+        for m in self._members.values():
+            amap = getattr(getattr(m, "backend", None), "amap", None)
+            if amap is not None:
+                amap.set_epoch(self.epoch)
+
+    def mark_failed(self, name: str) -> None:
+        """Fail-stop ``name`` at the routing plane: it leaves every
+        owner set immediately.  Re-replication is the manager's job."""
+        if name not in self._members:
+            raise KeyError(f"unknown member {name!r}")
+        if name in self._failed:
+            return
+        alive_after = [n for n in self._members
+                       if n not in self._failed and n != name]
+        if not alive_after:
+            raise FabricUnavailable("cannot fail the last alive member")
+        self._failed.add(name)
+        self._bump_epoch()
+
+    def add_member(self, path: MemoryPath) -> str:
+        """Attach a new member path (explicitly addressable for the
+        manager's copy phase).  It serves no pages until a new ring
+        including it is committed via ``commit_ring``."""
+        if (path.n_pages, path.page_bytes) != (self.n_pages,
+                                               self.page_bytes):
+            raise ValueError("new member disagrees on page geometry")
+        path.name = f"{path.name}/s{len(self._members)}"
+        self._members[path.name] = path
+        src = f"{next(iter(self._sources.values())).rsplit(':', 1)[0]}" \
+              f":{path.name}"
+        self.reactor.register_source(src, mode="interrupt")
+        self._sources[path.name] = src
+        self._scorer = PathSelector(list(self._members.values()),
+                                    reactor=self.reactor)
+        return path.name
+
+    def commit_ring(self, ring: PlacementPolicy) -> None:
+        """Flip placement to ``ring`` (the copy-then-flip commit point)
+        and bump the membership epoch."""
+        unknown = [m for m in ring.members if m not in self._members]
+        if unknown:
+            raise KeyError(f"ring names unknown members {unknown}")
+        with self._lock:
+            self.ring = ring
+        self.rebalances += 1
+        self._bump_epoch()
+
+    # -- routing ---------------------------------------------------------
+    def _check(self, page: int) -> None:
+        if self.n_pages < 1:
+            raise RuntimeError(
+                f"{self.name} path is stage-only (n_pages=0); construct "
+                f"its members with page geometry to use page ops")
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+
+    def _owners(self, page: int) -> List[str]:
+        """Alive owners, primary first (failed members skipped)."""
+        return [n for n in self.ring.owners(page) if n not in self._failed]
+
+    def _write_targets(self, page: int) -> List[str]:
+        owners = self._owners(page)
+        if not owners:
+            raise FabricUnavailable(
+                f"page {page}: every owner is failed "
+                f"({self.ring.owners(page)})")
+        return owners
+
+    def _pick_reader(self, page: int, nbytes: int, batch: int) -> str:
+        """Best-scored alive replica for a read — the per-member
+        ``PathSelector`` scoring, so a congested/failed shard reroutes
+        without the fabric repinning anything."""
+        owners = self._owners(page)
+        if not owners:
+            raise FabricUnavailable(
+                f"page {page}: no alive replica "
+                f"({self.ring.owners(page)} all failed)")
+        if self.ring.owners(page)[0] not in owners:
+            self.failovers += 1
+        if len(owners) == 1:
+            return owners[0]
+        ranked = self._scorer.rank([self._members[n] for n in owners],
+                                   nbytes, batch, Direction.C2H)
+        return ranked[0].name
+
+    def _record(self, name: str, dt: float, nbytes: int) -> None:
+        self.reactor.record(self._sources[name], dt, nbytes)
+
+    def _watch(self, name: str, io: PendingIO, t0: float,
+               nbytes: int) -> None:
+        """Record ``name``'s fabric telemetry when ITS sub-op settles —
+        never after the joint join, which would charge every member the
+        slowest member's latency and blind the manager's median-relative
+        straggler check (an eager IO settles inside the composite's
+        wait, so its callback still fires per member)."""
+        io.add_callback(lambda _c: self._record(
+            name, time.perf_counter() - t0, nbytes))
+
+    # -- page ops --------------------------------------------------------
+    def write(self, page: int, value: np.ndarray) -> None:
+        self._check(page)
+        targets = self._write_targets(page)
+        for n in targets:
+            t0 = time.perf_counter()
+            self._members[n].write(page, value)
+            self._record(n, time.perf_counter() - t0,
+                         int(np.asarray(value).nbytes))
+        with self._lock:
+            self._written.add(page)
+        self.replicated_writes += len(targets) - 1
+
+    def read(self, page: int) -> np.ndarray:
+        self._check(page)
+        n = self._pick_reader(page, self.page_bytes, 1)
+        t0 = time.perf_counter()
+        out = self._members[n].read(page)
+        self._record(n, time.perf_counter() - t0, int(out.nbytes))
+        return out
+
+    def write_many(self, pages: Sequence[int],
+                   values: Sequence[np.ndarray]) -> None:
+        self.write_many_async(pages, values).wait()
+
+    def write_many_async(self, pages: Sequence[int],
+                         values: Sequence[np.ndarray]) -> PendingIO:
+        """Replicated batched writes: one batched sub-write per member
+        (its doorbell coalescing intact), all issued before any join so
+        cross-shard replication overlaps; the handle's deps are the
+        member completions, joined with ``wait_all``."""
+        pages = list(pages)
+        if len(pages) != len(values):
+            raise ValueError(f"{len(pages)} pages vs {len(values)} values")
+        if not pages:
+            return PendingIO.ready()
+        per: Dict[str, Tuple[List[int], List[np.ndarray]]] = {}
+        extra = 0
+        for p, v in zip(pages, values):
+            self._check(p)
+            targets = self._write_targets(p)
+            extra += len(targets) - 1
+            for n in targets:
+                ps, vs = per.setdefault(n, ([], []))
+                ps.append(p)
+                vs.append(v)
+        t0 = time.perf_counter()
+        parts = [(n, self._members[n].write_many_async(ps, vs),
+                  sum(int(np.asarray(v).nbytes) for v in vs))
+                 for n, (ps, vs) in per.items()]
+        for n, io, nbytes in parts:
+            self._watch(n, io, t0, nbytes)
+        with self._lock:
+            self._written.update(pages)
+        self.replicated_writes += extra
+
+        def finalize(timeout: float):
+            wait_all([io for _, io, _ in parts], timeout)
+            return None
+        ios = [io for _, io, _ in parts]
+        reactive = all(getattr(io, "reactive", False) for io in ios)
+        return PendingIO(finalize, deps=ios if reactive else None)
+
+    def read_many(self, pages: Sequence[int]) -> np.ndarray:
+        return self.read_many_async(pages).wait()
+
+    def read_many_async(self, pages: Sequence[int]) -> PendingIO:
+        """Replica-routed batched reads: rows group into one batched
+        sub-read per serving member (chosen per page by replica score),
+        all in flight at once, reassembled into the caller's row order
+        when the deps settle."""
+        pages = list(pages)
+        if self.n_pages < 1:
+            self._check(0)
+        if not pages:
+            return PendingIO.ready(np.empty((0, self.page_bytes), np.uint8))
+        groups: Dict[str, Tuple[List[int], List[int]]] = {}
+        for row, p in enumerate(pages):
+            self._check(p)
+            n = self._pick_reader(p, self.page_bytes, len(pages))
+            rows, ps = groups.setdefault(n, ([], []))
+            rows.append(row)
+            ps.append(p)
+        t0 = time.perf_counter()
+        parts = [(n, rows, self._members[n].read_many_async(ps),
+                  len(ps) * self.page_bytes)
+                 for n, (rows, ps) in groups.items()]
+        for n, _, io, nbytes in parts:
+            self._watch(n, io, t0, nbytes)
+
+        def finalize(timeout: float):
+            out = np.empty((len(pages), self.page_bytes), np.uint8)
+            for n, rows, io, nbytes in parts:
+                out[np.asarray(rows, np.int64)] = io.wait(timeout)
+            return out
+        ios = [io for _, _, io, _ in parts]
+        reactive = all(getattr(io, "reactive", False) for io in ios)
+        return PendingIO(finalize, deps=ios if reactive else None,
+                         nbytes=len(pages) * self.page_bytes)
+
+    def read_quorum(self, page: int, timeout: float = 30.0) -> np.ndarray:
+        """Read from every alive replica at once and return as soon as a
+        majority agree bit-for-bit (``cplane.as_completed`` consumes the
+        replies in settle order).  Raises ``QuorumError`` when agreement
+        is impossible — too few survivors or a torn replica."""
+        self._check(page)
+        owners = self._owners(page)
+        need = len(self.ring.owners(page)) // 2 + 1
+        if len(owners) < need:
+            raise QuorumError(f"page {page}: {len(owners)} alive replicas "
+                              f"< quorum {need}")
+        self.quorum_reads += 1
+        ios = [self._members[n].read_many_async([page]) for n in owners]
+        votes: Dict[bytes, int] = {}
+        results: Dict[bytes, np.ndarray] = {}
+        for c in as_completed(ios, timeout):
+            try:
+                rows = c.result()
+            except Exception:
+                continue                    # a failed replica can't vote
+            val = np.asarray(rows[0])
+            key = val.tobytes()
+            votes[key] = votes.get(key, 0) + 1
+            results[key] = val
+            if votes[key] >= need:
+                return results[key]
+        raise QuorumError(
+            f"page {page}: no {need}-replica agreement "
+            f"({sorted(votes.values(), reverse=True)} votes)")
+
+    # -- stage ops (host <-> device): route to the best-scored member ----
+    def _stage_member(self, nbytes: int, direction: Direction) -> MemoryPath:
+        alive = [self._members[n] for n in self.alive_members()]
+        if not alive:
+            raise FabricUnavailable("no alive member for staging")
+        if len(alive) == 1:
+            return alive[0]
+        return self._scorer.select(nbytes, 1, direction, op="stage",
+                                   stage=True, candidates=alive)
+
+    def stage_h2c(self, host_arr, on_complete=None,
+                  qname: str = "default") -> Transfer:
+        m = self._stage_member(int(getattr(host_arr, "nbytes", 1)) or 1,
+                               Direction.H2C)
+        return m.stage_h2c(host_arr, on_complete=on_complete, qname=qname)
+
+    def stage_c2h(self, dev_arr, on_complete=None,
+                  qname: str = "default") -> Transfer:
+        m = self._stage_member(int(getattr(dev_arr, "nbytes", 1)) or 1,
+                               Direction.C2H)
+        return m.stage_c2h(dev_arr, on_complete=on_complete, qname=qname)
+
+    # -- TieredStore hooks -----------------------------------------------
+    @property
+    def doorbell_batch(self) -> int:
+        """Finest per-member overlap granularity (0 = no batching)."""
+        return max((getattr(m, "doorbell_batch", 0) or 0
+                    for m in self._members.values()), default=0)
+
+    def fetch_group_hint(self) -> int:
+        """Miss-pipeline group size for a shard-oblivious consumer: one
+        doorbell's worth of pages per alive member, so a group fans out
+        to one batched sub-read per shard (0 = take the whole miss set
+        in one vectorized batch)."""
+        depth = self.doorbell_batch
+        return depth * max(len(self.alive_members()), 1) if depth else 0
+
+    # -- selector inputs / capabilities ----------------------------------
+    def capabilities(self) -> PathCapabilities:
+        caps = [m.capabilities() for m in self._members.values()]
+        modes = tuple(dict.fromkeys(m for c in caps
+                                    for m in c.completion_modes))
+        return PathCapabilities(
+            kind=self.name,
+            granularity_bytes=min(c.granularity_bytes for c in caps),
+            max_inflight=sum(c.max_inflight for c in caps),
+            batch_coalescing=any(c.batch_coalescing for c in caps),
+            completion_modes=modes,
+            channels=sum(c.channels for c in caps),
+            model=caps[0].model, stage_model=caps[0].stage_model)
+
+    def occupancy(self) -> float:
+        alive = self.alive_members()
+        if not alive:
+            return 1.0
+        return max(self._members[n].occupancy() for n in alive)
+
+    def stats(self) -> dict:
+        members = {n: m.stats() for n, m in self._members.items()}
+        telemetry = {n: self.reactor.source_telemetry(src)
+                     for n, src in self._sources.items()}
+        with self._lock:
+            written = len(self._written)
+        agg = {k: sum(m.get(k, 0) for m in members.values())
+               for k in ("bytes_stored", "bytes_loaded", "store_ops",
+                         "load_ops", "store_batches", "load_batches",
+                         "stage_bytes", "stage_ops")}
+        return unified_stats(
+            self.name,
+            bytes_moved=sum(m["bytes_moved"] for m in members.values()),
+            ops=sum(m["ops"] for m in members.values()),
+            projected_s=sum(m["projected_s"] for m in members.values()),
+            tier=self.name, members=members, **agg,
+            ring={"members": list(self.ring.members),
+                  "replicas": self.ring.replicas,
+                  "vnodes": getattr(self.ring, "vnodes", 0)},
+            epoch=self.epoch, failed=self.failed_members,
+            written_pages=written,
+            replicated_writes=self.replicated_writes,
+            failovers=self.failovers, quorum_reads=self.quorum_reads,
+            rebalances=self.rebalances, pages_moved=self.pages_moved,
+            fabric_telemetry={n: t for n, t in telemetry.items()
+                              if t is not None})
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            for m in self._members.values():
+                m.close()
+        finally:
+            for src in self._sources.values():
+                self.reactor.unregister_source(src)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

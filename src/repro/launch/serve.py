@@ -31,9 +31,21 @@ depend only on its own cache, never on when neighbours joined the
 batch.  Over-long prompts are rejected with ``Request.failed`` set; the
 engine keeps serving the rest.
 
+With ``--kv-shards N`` the KV memory plane is *sharded*: N member paths
+(one per shard, each a full ``--access-path`` mechanism) sit behind a
+consistent-hash ``ShardedPath`` (DESIGN.md §7), with ``--kv-replicas R``
+copies of every page and a ``FabricManager`` watching member health.
+``--kv-kill-node STEP`` fail-stops one member mid-run: reads fail over
+to replicas instantly, the manager re-replicates onto the survivor
+ring, and the served tokens stay bit-exact with the unsharded path —
+the fabric moves where bytes live, never what they are.  The old
+``--kv-nodes`` flag (verbs-backend node striping) is a deprecated alias
+of ``--kv-shards``.
+
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
-                  [--kv-paging --access-path auto] [--no-overlap]
+                  [--kv-paging --access-path auto] [--no-overlap] \
+                  [--kv-shards 4 --kv-replicas 2 --kv-kill-node 5]
 """
 from __future__ import annotations
 
@@ -75,7 +87,9 @@ class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4,
                  max_len: int = 256, access_path: Optional[str] = None,
                  kv_backend: Optional[str] = None,
-                 kv_nodes: int = 2, kv_doorbell: int = 4,
+                 kv_shards: int = 1, kv_replicas: int = 1,
+                 kv_kill_step: Optional[int] = None,
+                 kv_nodes: Optional[int] = None, kv_doorbell: int = 4,
                  overlap: bool = True, overlap_grace_s: float = 0.002,
                  kv_node_latency_s: float = 0.0):
         if kv_backend is not None:
@@ -85,6 +99,31 @@ class ServeEngine:
                 DeprecationWarning, stacklevel=2)
             if access_path is None:
                 access_path = _KV_BACKEND_ALIAS[kv_backend]
+        if kv_nodes is not None:
+            # the --kv-nodes era striped one verbs backend over N
+            # memory nodes; membership is now the fabric's (sharded
+            # members, each a whole path), so the flag folds into it
+            warnings.warn(
+                "ServeEngine(kv_nodes=...) is deprecated; use "
+                "kv_shards=N (fabric membership)", DeprecationWarning,
+                stacklevel=2)
+            if kv_shards == 1:
+                kv_shards = kv_nodes
+        if kv_shards < 1:
+            raise ValueError(f"kv_shards must be >= 1, got {kv_shards}")
+        if not 1 <= kv_replicas <= max(kv_shards, 1):
+            raise ValueError(f"kv_replicas={kv_replicas} must be in "
+                             f"[1, kv_shards={kv_shards}]")
+        if kv_kill_step is not None and kv_replicas < 2:
+            raise ValueError(
+                "kv_kill_step without replication would lose pages: "
+                "use kv_replicas >= 2")
+        if access_path is None and (kv_shards > 1 or
+                                    kv_kill_step is not None):
+            # sharding implies paging: a library caller asking for a
+            # fabric (or fault injection) must get one, not a silent
+            # unsharded run — same default the CLI applies
+            access_path = "xdma"
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
@@ -113,16 +152,37 @@ class ServeEngine:
         self._pending_install: Dict[int, Tuple] = {}
         self.overlap_installs = 0       # installs that joined a settled
         self.blocking_installs = 0      # ... vs had to block/join inline
+        self.kv_shards = kv_shards
+        self.kv_replicas = kv_replicas
+        self.kv_kill_step = kv_kill_step
+        self.fabric = None                  # ShardedPath when sharded
+        self.fabric_mgr = None
+        self.killed_member: Optional[str] = None
+        self._step_no = 0
         if access_path is not None:
             self._cache_template = T.init_cache(cfg, 1, max_len)
             page_bytes = sum(l.nbytes
                              for l in jax.tree.leaves(self._cache_template))
-            # registry factories drop kwargs their path doesn't take
-            apath = create_path(access_path, n_pages=batch_slots,
-                                page_bytes=page_bytes, n_channels=2,
-                                n_nodes=kv_nodes,
-                                doorbell_batch=kv_doorbell,
-                                node_latency_s=kv_node_latency_s)
+            if kv_shards > 1:
+                # the sharded memory plane: N member paths (each a full
+                # access path) behind one consistent-hash ShardedPath —
+                # TieredStore stays shard-oblivious, both hops ride it
+                from repro.fabric import FabricManager
+                apath = create_path(
+                    "fabric", member=access_path, shards=kv_shards,
+                    replicas=kv_replicas, n_pages=batch_slots,
+                    page_bytes=page_bytes, n_channels=2, n_nodes=1,
+                    doorbell_batch=kv_doorbell,
+                    node_latency_s=kv_node_latency_s)
+                self.fabric = apath
+                self.fabric_mgr = FabricManager(apath)
+            else:
+                # registry factories drop kwargs their path doesn't take
+                apath = create_path(access_path, n_pages=batch_slots,
+                                    page_bytes=page_bytes, n_channels=2,
+                                    n_nodes=1,
+                                    doorbell_batch=kv_doorbell,
+                                    node_latency_s=kv_node_latency_s)
             self.pager = TieredStore(
                 n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
                 n_hot_slots=batch_slots, path=apath)
@@ -290,8 +350,24 @@ class ServeEngine:
             caches1 = self._page_fetch(s, leaves, treedef)
             self._install(s, req, tok, caches1)
 
+    def _maybe_kill_node(self) -> None:
+        """Fail one fabric member at the configured step (fault
+        injection): reads fail over to replicas immediately and the
+        manager re-replicates onto the survivor ring — decode output
+        must stay bit-exact through it."""
+        if self.fabric_mgr is None or self.kv_kill_step is None or \
+                self.killed_member is not None or \
+                self._step_no < self.kv_kill_step:
+            return
+        victim = self.fabric.alive_members()[-1]
+        repair = self.fabric_mgr.kill(victim)
+        self.killed_member = victim
+        self.kill_repair = repair
+
     def step(self) -> int:
         """One batched decode step; returns #active slots."""
+        self._step_no += 1
+        self._maybe_kill_node()
         self._admit()
         if self.pager is not None:
             have_active = any(r is not None for r in self.slot_req)
@@ -367,8 +443,19 @@ def main(argv=None) -> dict:
                     default=None,
                     help="DEPRECATED alias of --access-path "
                          "(local->xdma, remote->verbs)")
-    ap.add_argument("--kv-nodes", type=int, default=2,
-                    help="memory nodes for the verbs path")
+    ap.add_argument("--kv-shards", type=int, default=1,
+                    help="fabric members sharding the KV memory plane "
+                         "(>1 builds a consistent-hash ShardedPath of "
+                         "--access-path members)")
+    ap.add_argument("--kv-replicas", type=int, default=1,
+                    help="replication factor across fabric members")
+    ap.add_argument("--kv-kill-node", type=int, default=None,
+                    metavar="STEP",
+                    help="fail one fabric member at this decode step "
+                         "(fault injection; requires --kv-replicas >= 2)")
+    ap.add_argument("--kv-nodes", type=int, default=None,
+                    help="DEPRECATED alias of --kv-shards (was: memory "
+                         "nodes striped under one verbs backend)")
     ap.add_argument("--kv-doorbell", type=int, default=4,
                     help="doorbell batch depth for the verbs path")
     ap.add_argument("--no-overlap", action="store_true",
@@ -389,7 +476,14 @@ def main(argv=None) -> dict:
                       stacklevel=2)
         if access is None:
             access = _KV_BACKEND_ALIAS[args.kv_backend]
-    paging = args.kv_paging or access is not None
+    kv_shards = args.kv_shards
+    if args.kv_nodes is not None:
+        warnings.warn("--kv-nodes is deprecated; use --kv-shards "
+                      "(fabric membership)", DeprecationWarning,
+                      stacklevel=2)
+        if kv_shards == 1:
+            kv_shards = args.kv_nodes
+    paging = args.kv_paging or access is not None or kv_shards > 1
     if paging and access is None:
         access = "xdma"                 # the old local default
     cfg = get_config(args.arch)
@@ -399,7 +493,9 @@ def main(argv=None) -> dict:
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_len=args.max_len,
                       access_path=access if paging else None,
-                      kv_nodes=args.kv_nodes, kv_doorbell=args.kv_doorbell,
+                      kv_shards=kv_shards, kv_replicas=args.kv_replicas,
+                      kv_kill_step=args.kv_kill_node,
+                      kv_doorbell=args.kv_doorbell,
                       overlap=not args.no_overlap,
                       kv_node_latency_s=args.kv_node_latency)
     rng = np.random.default_rng(args.seed)
@@ -433,6 +529,20 @@ def main(argv=None) -> dict:
               f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
               f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
               flush=True)
+        if eng.fabric is not None:
+            fs = eng.fabric.stats()
+            result["fabric"] = {
+                "shards": eng.kv_shards, "replicas": eng.kv_replicas,
+                "epoch": fs["epoch"], "failed": fs["failed"],
+                "failovers": fs["failovers"],
+                "replicated_writes": fs["replicated_writes"],
+                "pages_moved": fs["pages_moved"],
+                "killed": eng.killed_member,
+                "repair": getattr(eng, "kill_repair", None)}
+            print(f"[serve:fabric] shards={eng.kv_shards} "
+                  f"replicas={eng.kv_replicas} epoch={fs['epoch']} "
+                  f"killed={eng.killed_member} "
+                  f"failovers={fs['failovers']}", flush=True)
         sel = eng.pager.path
         if isinstance(sel, PathSelector):
             trace = sel.decisions

@@ -47,6 +47,7 @@ class MemoryNode:
         self.name = name
         self.capacity_bytes = capacity_bytes
         self.latency_s = latency_s
+        self.epoch = 0                      # fabric membership epoch
         self.device = device if device is not None else jax.devices()[0]
         self.pool = np.zeros(capacity_bytes, np.uint8)
         self._brk = 0                       # bump allocator watermark
@@ -83,6 +84,17 @@ class MemoryNode:
         Callers own the invariant that no live region remains — e.g. a
         checkpoint node between retention epochs."""
         self._brk = 0
+
+    def set_epoch(self, epoch: int) -> None:
+        """Advance this node's view of the fabric membership epoch.
+
+        Epochs are monotonic — a decrease means a stale controller is
+        trying to roll the membership back, which is exactly the split-
+        brain the epoch exists to detect, so it raises."""
+        if epoch < self.epoch:
+            raise ValueError(f"{self.name}: epoch must be monotonic "
+                             f"({epoch} < {self.epoch})")
+        self.epoch = epoch
 
     # -- WR execution ----------------------------------------------------
     def execute(self, wrs: Sequence[WorkRequest], bell: _Doorbell) -> None:
@@ -226,12 +238,29 @@ class MapEntry:
 
 
 class AddressMap:
-    """Ordered virtual->physical routing table over memory nodes."""
+    """Ordered virtual->physical routing table over memory nodes.
+
+    Carries the fabric membership ``epoch``: the sharded fabric stamps
+    every membership change (failure, ring flip) down into each
+    member's map and nodes via ``set_epoch``, so any layer holding a
+    routing view can compare epochs and detect that it is stale.
+    """
 
     def __init__(self, entries: Sequence[MapEntry] = ()):
         self.entries: List[MapEntry] = []
+        self.epoch = 0
         for e in entries:
             self.add_range(e.vaddr_start, e.vaddr_end, e.node, e.phys_start)
+
+    def set_epoch(self, epoch: int) -> None:
+        """Advance the membership epoch (monotonic) and stamp it onto
+        every node this map routes to."""
+        if epoch < self.epoch:
+            raise ValueError(f"epoch must be monotonic "
+                             f"({epoch} < {self.epoch})")
+        self.epoch = epoch
+        for node in self.nodes:
+            node.set_epoch(epoch)
 
     def add_range(self, vaddr_start: int, vaddr_end: int, node: MemoryNode,
                   phys_start: int = 0) -> MapEntry:

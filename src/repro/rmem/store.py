@@ -200,9 +200,17 @@ class TieredStore:
         return s
 
     def _fetch_depth(self, n_missing: int) -> int:
-        """Cold-load group size: one doorbell per group on a verbs backend
-        (finest overlap granularity), a single vectorized batch otherwise."""
-        depth = getattr(self.backend, "doorbell_batch", 0) or n_missing
+        """Cold-load group size, chosen by the backend, not by any
+        knowledge of its topology: a backend that spans shards or
+        doorbells advertises its preferred group via
+        ``fetch_group_hint()`` (the sharded fabric returns one
+        doorbell's worth of pages per alive shard, so each group fans
+        out to one batched sub-read per member); a plain verbs backend
+        falls back to its doorbell depth; anything else takes the whole
+        miss set as a single vectorized batch."""
+        hint = getattr(self.backend, "fetch_group_hint", None)
+        depth = (hint() if hint is not None else 0) or \
+            getattr(self.backend, "doorbell_batch", 0) or n_missing
         return max(1, depth)
 
     def prefetch(self, pages: Sequence[int]) -> List[int]:

@@ -28,21 +28,38 @@ class StepGuard:
     failures: int = 0
     restores: int = 0
 
-    def run(self, step_fn: Callable, state, *args):
+    def _attempt(self, step_fn: Callable, state, *args):
+        """One bounded retry loop; returns ``(done, result, last_exc)``.
+        No backoff after the final attempt — the sleep only ever buys
+        time for the *next* try."""
         last = None
         for attempt in range(self.max_retries + 1):
             try:
-                return step_fn(state, *args)
+                return True, step_fn(state, *args), None
             except (FloatingPointError, StepFailure, RuntimeError) as e:
                 self.failures += 1
                 last = e
-                time.sleep(0.01 * (2 ** attempt))  # backoff
+                if attempt < self.max_retries:
+                    time.sleep(0.01 * (2 ** attempt))  # backoff
+        return False, None, last
+
+    def run(self, step_fn: Callable, state, *args):
+        ok, result, last = self._attempt(step_fn, state, *args)
+        if ok:
+            return result
+        restored = ""
         if self.on_restore is not None:
+            # replay the restored step under the SAME guard: a transient
+            # failure right after a restore must not crash the run when
+            # the original step was allowed to retry through it
             self.restores += 1
             state = self.on_restore()
-            return step_fn(state, *args)
+            ok, result, last = self._attempt(step_fn, state, *args)
+            if ok:
+                return result
+            restored = " plus a guarded post-restore replay"
         raise StepFailure(f"step failed after {self.max_retries + 1} "
-                          f"attempts") from last
+                          f"attempts{restored}") from last
 
 
 @dataclass

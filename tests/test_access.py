@@ -12,7 +12,9 @@ from repro.core.channels import Direction
 from repro.rmem import TieredStore
 from repro.rmem.backend import PendingIO
 
-PATH_NAMES = ("xdma", "qdma", "verbs")
+# "fabric" rides the same reusable adapter contract: a ShardedPath of
+# member paths must behave exactly like any single path (ISSUE 5)
+PATH_NAMES = ("xdma", "qdma", "verbs", "fabric")
 
 
 class TestAdapters:

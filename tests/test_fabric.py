@@ -1,0 +1,388 @@
+"""repro.fabric tests (ISSUE 5): consistent-hash placement, rebalance
+planning, the ShardedPath MemoryPath (replicated writes, replica-routed
+and quorum reads, per-shard batching), FabricManager failover + online
+copy-then-flip rebalancing, membership epochs, TieredStore/serve
+integration, and the deprecated --kv-nodes alias."""
+import numpy as np
+import pytest
+
+from repro.access import PathSelector, create_path
+from repro.fabric import (FabricDataLoss, FabricManager, FabricUnavailable,
+                          HashRing, QuorumError, ShardedPath,
+                          plan_rebalance)
+from repro.rmem import TieredStore
+
+
+def _vals(n_pages, page_bytes, seed=0):
+    rng = np.random.default_rng(seed)
+    return {p: rng.integers(0, 256, page_bytes, np.uint8).astype(np.uint8)
+            for p in range(n_pages)}
+
+
+class TestHashRing:
+    def test_deterministic_and_distinct_owners(self):
+        r = HashRing(["a", "b", "c", "d"], replicas=3, vnodes=32)
+        for p in range(64):
+            own = r.owners(p)
+            assert len(own) == 3 and len(set(own)) == 3
+            assert own == HashRing(["a", "b", "c", "d"], replicas=3,
+                                   vnodes=32).owners(p)
+            assert own[0] == r.primary(p)
+
+    def test_every_member_owns_something(self):
+        r = HashRing([f"m{i}" for i in range(4)], vnodes=64)
+        primaries = {r.primary(p) for p in range(256)}
+        assert primaries == set(r.members)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="at least one"):
+            HashRing([])
+        with pytest.raises(ValueError, match="replicas"):
+            HashRing(["a", "b"], replicas=3)
+        with pytest.raises(ValueError, match="replicas"):
+            HashRing(["a"], replicas=0)
+
+    def test_with_members_clamps_replicas(self):
+        r = HashRing(["a", "b"], replicas=2)
+        shrunk = r.with_members(["a"])
+        assert shrunk.replicas == 1 and shrunk.owners(0) == ["a"]
+
+
+class TestRebalancePlan:
+    def test_remove_moves_only_victims_pages(self):
+        members = [f"m{i}" for i in range(4)]
+        ring = HashRing(members, replicas=1, vnodes=64)
+        pages = range(128)
+        victim = "m2"
+        plan = plan_rebalance(ring, [m for m in members if m != victim],
+                              pages, alive=members)
+        owned = {p for p in pages if ring.primary(p) == victim}
+        assert {m.page for m in plan.moves} == owned
+        assert all(m.srcs == (victim,) for m in plan.moves)
+        assert not plan.lost
+        # ~1/N of pages move, never the lot
+        assert 0 < plan.moved_fraction < 0.5
+
+    def test_add_moves_about_one_over_n(self):
+        members = [f"m{i}" for i in range(4)]
+        ring = HashRing(members, replicas=1, vnodes=128)
+        plan = plan_rebalance(ring, members + ["m4"], range(256))
+        assert all(mv.dst == "m4" for mv in plan.moves)
+        assert 0.05 < plan.moved_fraction < 0.45   # ~1/5 expected
+        assert len(plan.drops) == plan.moved_pages  # old owner releases
+
+    def test_dead_source_excluded_and_loss_reported(self):
+        ring = HashRing(["a", "b"], replicas=1, vnodes=32)
+        a_pages = [p for p in range(32) if ring.primary(p) == "a"][:2]
+        plan = plan_rebalance(ring, ["b"], a_pages, alive=["b"])
+        assert not plan.moves
+        assert set(plan.lost) == set(a_pages)
+
+    def test_replicated_plan_copies_from_survivors(self):
+        ring = HashRing(["a", "b", "c"], replicas=2, vnodes=64)
+        pages = range(64)
+        plan = plan_rebalance(ring, ["a", "b"], pages,
+                              alive=["a", "b"])
+        assert not plan.lost            # R=2: a survivor always holds it
+        for mv in plan.moves:
+            assert mv.dst != "c" and all(s != "c" for s in mv.srcs)
+
+
+class TestShardedPath:
+    def _fabric(self, shards=3, replicas=2, n_pages=8, page_bytes=64,
+                member="xdma", **kw):
+        return create_path("fabric", member=member, shards=shards,
+                           replicas=replicas, n_pages=n_pages,
+                           page_bytes=page_bytes, n_channels=1, **kw)
+
+    def test_replicated_write_lands_on_r_members(self):
+        with self._fabric() as fab:
+            v = _vals(8, 64)
+            for p, val in v.items():
+                fab.write(p, val)
+            s = fab.stats()
+            # every page stored replicas times across the members
+            assert s["bytes_stored"] == 2 * 8 * 64
+            assert s["replicated_writes"] == 8
+            per_member = [m["bytes_stored"]
+                          for m in s["members"].values()]
+            assert sum(b > 0 for b in per_member) >= 2  # genuinely spread
+
+    def test_batched_roundtrip_bit_exact_across_shards(self):
+        with self._fabric(member="verbs", doorbell_batch=2) as fab:
+            v = _vals(8, 64, seed=3)
+            fab.write_many_async(list(v), list(v.values())).wait()
+            out = fab.read_many([7, 2, 5, 0, 1])
+            for row, p in enumerate([7, 2, 5, 0, 1]):
+                np.testing.assert_array_equal(out[row], v[p])
+
+    def test_read_fails_over_to_replica_on_marked_member(self):
+        with self._fabric() as fab:
+            v = _vals(8, 64, seed=1)
+            for p, val in v.items():
+                fab.write(p, val)
+            victim = fab.ring.owners(0)[0]
+            fab.mark_failed(victim)
+            np.testing.assert_array_equal(fab.read(0), v[0])  # replica
+            assert fab.failovers >= 1
+            assert fab.epoch == 1
+            assert victim in fab.failed_members
+
+    def test_unreplicated_failure_is_loud(self):
+        with self._fabric(replicas=1) as fab:
+            v = _vals(8, 64, seed=2)
+            for p, val in v.items():
+                fab.write(p, val)
+            victim = fab.ring.owners(0)[0]
+            fab.mark_failed(victim)
+            with pytest.raises(FabricUnavailable, match="no alive"):
+                fab.read(0)
+
+    def test_cannot_fail_last_member(self):
+        with self._fabric(shards=2, replicas=1) as fab:
+            fab.mark_failed(fab.member_names[0])
+            with pytest.raises(FabricUnavailable, match="last alive"):
+                fab.mark_failed(fab.member_names[1])
+
+    def test_quorum_read_agreement_and_mismatch(self):
+        with self._fabric(shards=3, replicas=3) as fab:
+            v = _vals(4, 64, seed=4)
+            for p, val in v.items():
+                fab.write(p, val)
+            np.testing.assert_array_equal(fab.read_quorum(1), v[1])
+            assert fab.quorum_reads == 1
+            # corrupt TWO of three replicas: majority flips to the torn
+            # value is impossible, agreement on the good one too -> raise
+            owners = fab.ring.owners(2)
+            fab.member(owners[0]).write(2, np.zeros(64, np.uint8))
+            fab.member(owners[1]).write(2, np.ones(64, np.uint8))
+            with pytest.raises(QuorumError, match="agreement"):
+                fab.read_quorum(2)
+
+    def test_congested_shard_reroutes_reads_per_member(self):
+        """Per-member PathSelector scoring (DESIGN.md §6 measured term):
+        a primary replica with observed queueing delay — in-flight ops
+        on a slow EWMA — stops serving the read, with no placement or
+        ring change."""
+        with self._fabric(shards=3, replicas=2) as fab:
+            v = _vals(8, 64, seed=5)
+            for p, val in v.items():
+                fab.write(p, val)
+            page = 0
+            owners = fab.ring.owners(page)
+            assert fab._pick_reader(page, 64, 1) == owners[0]  # idle
+            # congest the primary: slow completions + work in flight on
+            # its page-op telemetry source
+            src = fab.member(owners[0]).telemetry_source()
+            for _ in range(4):
+                fab.reactor.record(src, 0.05, 64)
+            fab.reactor.on_submit(src)
+            fab.reactor.on_submit(src)
+            picked = fab._pick_reader(page, 64, 1)
+            assert picked == owners[1]      # rerouted, ring untouched
+            assert fab.ring.owners(page) == owners
+            np.testing.assert_array_equal(fab.read(page), v[page])
+
+    def test_epoch_propagates_into_member_nodes(self):
+        with self._fabric(member="verbs", shards=2, replicas=2) as fab:
+            assert fab.epoch == 0
+            fab.mark_failed(fab.member_names[0])
+            survivor = fab.member(fab.member_names[1])
+            assert survivor.backend.amap.epoch == fab.epoch == 1
+            assert all(n.epoch == 1 for n in survivor.backend.amap.nodes)
+
+    def test_selector_rank_orders_by_score(self):
+        with create_path("auto", n_pages=4, page_bytes=4096,
+                         n_channels=1) as sel:
+            assert isinstance(sel, PathSelector)
+            ranked = sel.rank(sel.paths, 4096, 1)
+            assert [p.name for p in ranked][0] == "verbs"   # model argmin
+            scores = [sel.score(p, 4096, 1) for p in ranked]
+            assert scores == sorted(scores)
+
+    def test_fabric_as_tiered_store_backend(self):
+        with TieredStore(10, (4, 8), dtype="float32", n_hot_slots=3,
+                         path="fabric", member="xdma", shards=3,
+                         replicas=2, n_channels=1) as st:
+            for p in range(10):
+                st.write_page(p, np.full((4, 8), p, np.float32))
+            st.ensure([0, 1, 2])
+            st.update_page(1, np.full((4, 8), 77.0, np.float32))
+            st.ensure([3, 4, 5])            # evicts, dirty 1 written back
+            res = st.ensure([1, 9])
+            assert float(np.asarray(res[1])[0, 0]) == 77.0
+            assert st.stats()["cold"]["path"] == "fabric"
+
+    def test_geometry_mismatch_rejected(self):
+        a = create_path("xdma", n_pages=2, page_bytes=64, n_channels=1)
+        b = create_path("xdma", n_pages=4, page_bytes=64, n_channels=1)
+        try:
+            with pytest.raises(ValueError, match="geometry"):
+                ShardedPath([a, b])
+            # a rejected ctor must not leave the members renamed
+            assert a.name == "xdma" and b.name == "xdma"
+        finally:
+            a.close()
+            b.close()
+
+    def test_rejected_create_fabric_closes_members(self):
+        """A ShardedPath constructor failure inside create_fabric must
+        not strand member node threads/pools."""
+        import threading
+        before = threading.active_count()
+        with pytest.raises(ValueError, match="replicas"):
+            create_path("fabric", member="verbs", shards=2, replicas=3,
+                        n_pages=4, page_bytes=64, n_channels=1)
+        assert threading.active_count() == before
+
+    def test_member_telemetry_is_per_member_not_joint(self):
+        """Batched fan-out must charge each member ITS OWN settle
+        latency — not the joint join time — or the manager's
+        median-relative straggler check goes blind."""
+        fast = [create_path("verbs", n_pages=8, page_bytes=64,
+                            n_channels=1, doorbell_batch=2)
+                for _ in range(2)]
+        slow = create_path("verbs", n_pages=8, page_bytes=64,
+                           n_channels=1, doorbell_batch=2,
+                           node_latency_s=0.05)
+        with ShardedPath(fast + [slow], replicas=3) as fab:
+            v = _vals(8, 64, seed=9)
+            for _ in range(3):      # past the manager's warmup
+                fab.write_many_async(list(v), list(v.values())).wait()
+            t_fast = fab.reactor.stats_for(fab.source_of(fast[0].name))
+            t_slow = fab.reactor.stats_for(fab.source_of(slow.name))
+            assert t_slow.ewma_latency_s > 3 * t_fast.ewma_latency_s
+            mgr = FabricManager(fab, straggler_threshold=2.0, warmup=2)
+            assert mgr.check_health() == [slow.name]
+
+
+class TestFabricManager:
+    def _fabric(self, **kw):
+        kw.setdefault("member", "xdma")
+        kw.setdefault("shards", 3)
+        kw.setdefault("replicas", 2)
+        return create_path("fabric", n_pages=16, page_bytes=64,
+                           n_channels=1, **kw)
+
+    def test_fail_node_repairs_replication_online(self):
+        with self._fabric() as fab:
+            mgr = FabricManager(fab)
+            v = _vals(16, 64, seed=6)
+            fab.write_many_async(list(v), list(v.values())).wait()
+            victim = fab.member_names[0]
+            repair = mgr.fail_node(victim)
+            assert repair["failed_member"] == victim
+            assert repair["lost"] == 0
+            assert 0 < repair["moved_pages"] <= 16
+            # post-repair: every page readable bit-exactly AND fully
+            # re-replicated on the survivor ring
+            for p, val in v.items():
+                np.testing.assert_array_equal(fab.read(p), val)
+                np.testing.assert_array_equal(fab.read_quorum(p), val)
+            assert fab.epoch == 2       # fail + flip
+            assert victim not in fab.ring.members
+
+    def test_fail_without_replica_raises_data_loss(self):
+        with self._fabric(replicas=1) as fab:
+            mgr = FabricManager(fab)
+            v = _vals(16, 64, seed=7)
+            for p, val in v.items():
+                fab.write(p, val)
+            victim = fab.ring.primary(0)
+            with pytest.raises(FabricDataLoss, match="no surviving"):
+                mgr.fail_node(victim)
+
+    def test_scale_out_moves_about_one_over_n(self):
+        with self._fabric(shards=4, replicas=1) as fab:
+            mgr = FabricManager(fab)
+            v = _vals(16, 64, seed=8)
+            fab.write_many_async(list(v), list(v.values())).wait()
+            new = create_path("xdma", n_pages=16, page_bytes=64,
+                              n_channels=1)
+            stats = mgr.rebalance(add=[new])
+            assert stats["added"] == [new.name]
+            assert new.name in fab.ring.members
+            # only ~1/(N+1) of pages moved, all still bit-exact
+            assert stats["moved_fraction"] < 0.5
+            for p, val in v.items():
+                np.testing.assert_array_equal(fab.read(p), val)
+            assert fab.pages_moved == stats["moved_pages"]
+
+    def test_straggler_flagged_from_recorded_latencies(self):
+        with self._fabric() as fab:
+            mgr = FabricManager(fab, straggler_threshold=2.0, warmup=2)
+            slow, fast = fab.member_names[0], fab.member_names[1]
+            for _ in range(5):
+                assert not mgr.record(fast, 0.01)
+            for _ in range(5):
+                mgr.record(slow, 0.01)
+            assert mgr.record(slow, 0.1)        # 10x its EWMA baseline
+            assert slow in mgr.suspects
+
+    def test_check_health_reads_fabric_telemetry(self):
+        with self._fabric() as fab:
+            mgr = FabricManager(fab, straggler_threshold=2.0, warmup=2)
+            # feed the fabric's per-member reactor sources directly
+            for n in fab.member_names:
+                lat = 0.5 if n == fab.member_names[-1] else 0.001
+                for _ in range(4):
+                    fab.reactor.record(fab.source_of(n), lat, 64)
+            flagged = mgr.check_health()
+            assert flagged == [fab.member_names[-1]]
+            assert flagged[0] in mgr.suspects
+
+
+class TestServeFabric:
+    def _serve(self, extra, requests=3, max_new=4):
+        from repro.launch.serve import main
+        return main(["--smoke", "--requests", str(requests), "--max-new",
+                     str(max_new), "--slots", "2", "--prompt-len", "6"]
+                    + extra)
+
+    def test_sharded_serve_bit_exact_with_kill_mid_run(self):
+        base = self._serve(["--kv-paging"])
+        shard = self._serve(["--kv-shards", "4", "--kv-replicas", "2",
+                             "--kv-kill-node", "3"])
+        assert shard["outputs"] == base["outputs"]
+        fb = shard["fabric"]
+        assert fb["shards"] == 4 and fb["replicas"] == 2
+        assert fb["killed"] is not None
+        assert fb["repair"]["lost"] == 0
+        assert shard["undrained"] == 0
+
+    def test_kv_nodes_deprecated_alias_warns_and_matches_kv_shards(self):
+        with pytest.warns(DeprecationWarning, match="--kv-nodes"):
+            alias = self._serve(["--kv-nodes", "2"], requests=2,
+                                max_new=3)
+        shards = self._serve(["--kv-shards", "2"], requests=2, max_new=3)
+        assert alias["outputs"] == shards["outputs"]
+        assert alias["fabric"]["shards"] == 2
+        assert shards["fabric"]["shards"] == 2
+
+    def test_kill_without_replication_rejected(self):
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.launch.serve import ServeEngine
+        from repro.models import transformer as T
+        import jax
+        cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+        params = T.tree_init(T.param_defs(cfg), cfg,
+                             jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="kv_replicas >= 2"):
+            ServeEngine(cfg, params, access_path="xdma", kv_shards=4,
+                        kv_replicas=1, kv_kill_step=2)
+
+    def test_library_kv_shards_without_access_path_builds_fabric(self):
+        """Sharding implies paging for library callers too — no silent
+        unsharded run when access_path is omitted."""
+        from repro.configs import get_config, reduce_for_smoke
+        from repro.launch.serve import ServeEngine
+        from repro.models import transformer as T
+        import jax
+        cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+        params = T.tree_init(T.param_defs(cfg), cfg,
+                             jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, batch_slots=2, kv_shards=3,
+                          kv_replicas=2)
+        assert eng.fabric is not None and eng.pager is not None
+        assert len(eng.fabric.member_names) == 3
+        eng.pager.close()

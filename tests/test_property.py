@@ -88,6 +88,38 @@ def test_quantize_int8_error_bound(xs):
     assert err.max() <= float(s) * 0.5 + 1e-5
 
 
+@given(st.integers(2, 8), st.integers(16, 256), st.integers(0, 7),
+       st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_hash_ring_placement_is_stable(n_members, n_pages, victim_ix,
+                                       salt):
+    """Consistent-hash stability (ISSUE 5): removing one member
+    relocates ONLY the pages that member owned (everything else keeps
+    its exact owner); adding one member relocates at most about its
+    fair share, and every relocated page moves TO the new member."""
+    from repro.fabric.placement import HashRing
+    members = [f"salt{salt}-m{i}" for i in range(n_members)]
+    ring = HashRing(members, replicas=1, vnodes=128)
+    owners = {p: ring.primary(p) for p in range(n_pages)}
+
+    # -- removal: survivors' pages never move -------------------------
+    victim = members[victim_ix % n_members]
+    smaller = ring.with_members([m for m in members if m != victim])
+    for p in range(n_pages):
+        if owners[p] != victim:
+            assert smaller.primary(p) == owners[p]
+        else:
+            assert smaller.primary(p) != victim
+
+    # -- addition: ≤ fair share moves, all toward the newcomer --------
+    grown = ring.with_members(members + [f"salt{salt}-new"])
+    moved = [p for p in range(n_pages) if grown.primary(p) != owners[p]]
+    for p in moved:
+        assert grown.primary(p) == f"salt{salt}-new"
+    fair = -(-n_pages // (n_members + 1))       # ceil(P / (N+1))
+    assert len(moved) <= fair + max(4, fair)
+
+
 @given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16))
 @settings(**SETTINGS)
 def test_resolve_spec_always_divides(d1, d2, axis):

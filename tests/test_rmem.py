@@ -154,6 +154,86 @@ class TestAddressMap:
             with pytest.raises(ValueError, match="overlap"):
                 amap.add_range(256, 768, node, phys_start=512)
 
+    def test_resolve_span_crossing_node_boundaries(self):
+        """A span covering parts of three ranges must split exactly at
+        every boundary, with per-piece phys offsets and local offsets
+        that tile the request (ISSUE 5 satellite)."""
+        n0, n1, n2 = (MemoryNode(f"mx{i}", 1 << 12) for i in range(3))
+        try:
+            amap = AddressMap()
+            amap.add_range(0, 100, n0, phys_start=0)
+            amap.add_range(100, 250, n1, phys_start=40)
+            amap.add_range(250, 300, n2, phys_start=7)
+            pieces = amap.resolve(60, 220)      # [60, 280)
+            assert [(p[0].name, p[1], p[2], p[3]) for p in pieces] == [
+                ("mx0", 60, 40, 0),             # [60, 100): tail of n0
+                ("mx1", 40, 150, 40),           # [100, 250): all of n1
+                ("mx2", 7, 30, 190),            # [250, 280): head of n2
+            ]
+            assert sum(p[2] for p in pieces) == 220
+            # local offsets tile the request contiguously
+            off = 0
+            for _, _, nbytes, local in pieces:
+                assert local == off
+                off += nbytes
+            # exact-boundary start lands on the second range, not a hole
+            (node, phys, nbytes, local), = amap.resolve(100, 10)
+            assert node is n1 and phys == 40 and local == 0
+            # last byte of the map resolves; one past raises
+            (node, phys, nbytes, _), = amap.resolve(299, 1)
+            assert node is n2 and phys == 7 + 49 and nbytes == 1
+            with pytest.raises(ValueError, match="unmapped"):
+                amap.resolve(299, 2)
+        finally:
+            for n in (n0, n1, n2):
+                n.close()
+
+    def test_striped_non_divisible_remainder_stripe(self):
+        """Striping a total that doesn't divide by the node count must
+        give the last node exactly the remainder — full coverage, no
+        overlap, no byte past the total (ISSUE 5 satellite)."""
+        nodes = [MemoryNode(f"ms{i}", 1 << 12) for i in range(3)]
+        try:
+            total = 1000                        # ceil(1000/3) = 334
+            amap = AddressMap.striped(nodes, total, align=1)
+            spans = [(e.vaddr_start, e.vaddr_end) for e in amap.entries]
+            assert spans == [(0, 334), (334, 668), (668, 1000)]
+            assert spans[-1][1] - spans[-1][0] == 1000 - 2 * 334  # 332
+            # the whole space resolves with pieces summing to total
+            pieces = amap.resolve(0, total)
+            assert sum(p[2] for p in pieces) == total
+            assert [p[0].name for p in pieces] == ["ms0", "ms1", "ms2"]
+            with pytest.raises(ValueError, match="unmapped"):
+                amap.resolve(total - 1, 2)
+            # a stripe-boundary-straddling write/read roundtrips bit-exact
+            src = np.random.default_rng(9).integers(
+                0, 256, 200, dtype=np.uint8)
+            qp = QueuePair(amap)
+            qp.write(MemoryRegion(src), 0, 300, 200)   # spans 334
+            back = np.zeros(200, np.uint8)
+            qp.read(MemoryRegion(back), 0, 300, 200)
+            np.testing.assert_array_equal(back, src)
+        finally:
+            for n in nodes:
+                n.close()
+
+    def test_membership_epoch_monotonic_and_propagated(self):
+        """ISSUE 5: the fabric stamps membership epochs down through the
+        map into every node; rollback attempts raise."""
+        nodes = [MemoryNode(f"me{i}", 1 << 10) for i in range(2)]
+        try:
+            amap = AddressMap.striped(nodes, 1024)
+            assert amap.epoch == 0 and all(n.epoch == 0 for n in nodes)
+            amap.set_epoch(3)
+            assert all(n.epoch == 3 for n in nodes)
+            with pytest.raises(ValueError, match="monotonic"):
+                amap.set_epoch(2)
+            with pytest.raises(ValueError, match="monotonic"):
+                nodes[0].set_epoch(1)
+        finally:
+            for n in nodes:
+                n.close()
+
 
 class TestBackends:
     def test_local_backend_roundtrip_and_accounting(self):

@@ -36,6 +36,52 @@ class TestStepGuard:
         with pytest.raises(StepFailure):
             g.run(lambda s: (_ for _ in ()).throw(RuntimeError("x")), None)
 
+    def test_post_restore_replay_is_guarded(self):
+        """A transient failure right after the restore must retry under
+        the same guard instead of crashing the run (ISSUE 5)."""
+        calls = {"post_restore": 0}
+
+        def flaky(state, x):
+            if state == "corrupt":
+                raise RuntimeError("bad state")
+            calls["post_restore"] += 1
+            if calls["post_restore"] == 1:
+                raise RuntimeError("transient right after restore")
+            return state + x
+
+        g = StepGuard(max_retries=1, on_restore=lambda: 10)
+        assert g.run(flaky, "corrupt", 5) == 15
+        assert g.restores == 1
+        assert g.failures == 3      # 2 corrupt-state + 1 post-restore
+
+    def test_guarded_replay_exhaustion_raises_step_failure(self):
+        g = StepGuard(max_retries=1, on_restore=lambda: "still-bad")
+
+        def always(state, *a):
+            raise RuntimeError("x")
+
+        with pytest.raises(StepFailure, match="post-restore replay"):
+            g.run(always, None)
+        assert g.restores == 1 and g.failures == 4
+
+    def test_no_backoff_after_final_attempt(self, monkeypatch):
+        """The retry backoff buys time for the NEXT attempt; after the
+        last one it is pure dead time and must be skipped."""
+        from repro.runtime import fault
+        sleeps = []
+        monkeypatch.setattr(fault.time, "sleep",
+                            lambda s: sleeps.append(s))
+        g = StepGuard(max_retries=2)
+
+        def always(state):
+            raise RuntimeError("x")
+
+        with pytest.raises(StepFailure):
+            g.run(always, None)
+        # 3 attempts -> sleeps only between them, never after the last
+        assert len(sleeps) == 2
+        assert sleeps == [0.01, 0.02]
+
 
 class TestStraggler:
     def test_flags_slow_step(self):
