@@ -1,12 +1,30 @@
 """Shared benchmark utilities: timing, CSV row emission, CPU ceiling."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, List
 
 import numpy as np
 
+from repro import obs
+
 ROWS: List[str] = []
+
+
+def write_bench_json(path: str, payload: dict) -> dict:
+    """Write a ``BENCH_*.json`` with the obs metrics snapshot embedded.
+
+    Every bench artifact carries the process-wide registry state under a
+    ``"metrics"`` key (empty dict when nothing was recorded), so CI runs
+    keep the distributions next to the numbers they gate on.  Returns
+    the payload (with the snapshot) for callers that keep using it.
+    """
+    payload.setdefault("metrics", obs.default_registry().snapshot())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return payload
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

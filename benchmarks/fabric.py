@@ -27,12 +27,11 @@ throughput, a sane rebalance fraction, and bit-exactness everywhere.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.access.registry import create_path
 from repro.fabric import FabricManager
 
@@ -160,9 +159,7 @@ def run(quick: bool = False, out: str = "") -> dict:
          f"scaling={data['fabric']['scaling_4_vs_1']:.2f}x "
          f"baseline_ratio={shards1_ratio:.2f} ok={data['fabric']['ok']}")
     if out:
-        with open(out, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-        print(f"# wrote {out}", flush=True)
+        write_bench_json(out, data)
     return data
 
 

@@ -33,12 +33,11 @@ while doing so.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench_json
 from repro.access import create_path
 from repro.core.analytical import (bandwidth_gbps, doorbell_bandwidth_gbps,
                                    far_memory_path, tpu_host_path)
@@ -298,14 +297,11 @@ def run(quick: bool = False, out: str = "", select_out: str = "") -> dict:
         metrics["path_select"] = _path_select_rows(quick)
         metrics["serve"] = _serve_metrics(quick)
     if out:
-        with open(out, "w") as f:
-            json.dump(metrics, f, indent=2)
-        print(f"# wrote {out}", flush=True)
+        write_bench_json(out, metrics)
     if select_out:
-        with open(select_out, "w") as f:
-            json.dump({"path_select": metrics["path_select"],
-                       "serve": metrics["serve"]}, f, indent=2)
-        print(f"# wrote {select_out}", flush=True)
+        write_bench_json(select_out,
+                         {"path_select": metrics["path_select"],
+                          "serve": metrics["serve"]})
     return metrics
 
 

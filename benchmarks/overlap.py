@@ -27,13 +27,12 @@ serial baseline.
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs import get_config, reduce_for_smoke
 from repro.launch.serve import Request, ServeEngine
 from repro.models import transformer as T
@@ -138,9 +137,7 @@ def run(quick: bool = False, out: str = "") -> dict:
          f"speedup={data['overlap']['speedup']:.2f}x "
          f"ok={data['overlap']['ok']}")
     if out:
-        with open(out, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-        print(f"# wrote {out}", flush=True)
+        write_bench_json(out, data)
     return data
 
 

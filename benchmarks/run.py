@@ -15,6 +15,7 @@ import traceback
 from benchmarks import (completion_modes, contention, e2e_step, fabric,
                         far_memory, host_device_bw, offload_step, overlap,
                         rdma_analogue, vmem_stream)
+from repro import obs
 
 MODULES = [
     ("fig8_vmem_stream", vmem_stream),
@@ -45,8 +46,19 @@ def main(argv=None) -> None:
     ap.add_argument("--fabric-json", default="",
                     help="fabric sweep JSON path (fabric module); "
                          "defaults to BENCH_fabric.json with --smoke")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="enable tracing and write a Chrome trace-event "
+                         "JSON of the whole run (Perfetto-loadable)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable live metrics (the registry snapshot "
+                         "lands in every BENCH_*.json; on by default "
+                         "with --smoke)")
     args = ap.parse_args(argv)
     quick = args.quick or args.smoke
+    if args.trace_out:
+        obs.trace.enable()
+    if args.metrics or args.smoke:
+        obs.metrics.enable_live()
     json_out = args.json or ("BENCH_miss_pipeline.json" if args.smoke
                              else "")
     select_out = args.select_json or ("BENCH_path_select.json"
@@ -70,6 +82,10 @@ def main(argv=None) -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.trace_out:
+        n_ev = obs.trace.export(args.trace_out)
+        print(f"# wrote {n_ev} trace events to {args.trace_out}",
+              flush=True)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

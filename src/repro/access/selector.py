@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.access.path import (MemoryPath, PathCapabilities,
                                TierBackendCompat, unified_stats)
 from repro.core.analytical import PathModel
@@ -111,23 +112,41 @@ class PathSelector(TierBackendCompat):
             (getattr(p, "doorbell_batch", 0) for p in paths), default=0)
 
     # -- policy ----------------------------------------------------------
-    def _measured_delay(self, path: MemoryPath,
-                        stage: bool) -> Optional[float]:
+    def _snapshot_telemetry(self, cands: Sequence[MemoryPath],
+                            stage: bool) -> Dict[str, "object"]:
+        """One consistent reactor snapshot covering every candidate's
+        telemetry source (single lock acquisition — comparing sources
+        snapshotted at different instants would skew the ranking)."""
+        srcs = []
+        for p in cands:
+            src_fn = getattr(p, "telemetry_source", None)
+            if src_fn is not None:
+                srcs.append(src_fn(stage=stage))
+        return self.reactor.stats_many(srcs) if srcs else {}
+
+    def _measured_delay(self, path: MemoryPath, stage: bool,
+                        telemetry: Optional[Dict] = None
+                        ) -> Optional[float]:
         """Reactor-observed queueing delay for ``path``: in-flight ops ×
         EWMA completion latency (Little's-law expected wait for the
         path's queue to drain).  ``None`` when the path exposes no
         telemetry source or hasn't completed enough ops to trust the
-        EWMA; ``0.0`` when it is measurably idle."""
+        EWMA; ``0.0`` when it is measurably idle.  ``telemetry`` is a
+        pre-fetched ``stats_many`` snapshot (so one select compares all
+        candidates at the same instant)."""
         src_fn = getattr(path, "telemetry_source", None)
         if src_fn is None:
             return None
-        st = self.reactor.stats_for(src_fn(stage=stage))
+        src = src_fn(stage=stage)
+        st = telemetry.get(src) if telemetry is not None \
+            else self.reactor.stats_for(src)
         if st is None or st.completed < self.min_measured_samples:
             return None
         return st.inflight * st.ewma_latency_s
 
     def _score_path(self, path: MemoryPath, nbytes: int, batch: int,
-                    direction: Direction, stage: bool):
+                    direction: Direction, stage: bool,
+                    telemetry: Optional[Dict] = None):
         """The one scoring formula: ``(score, projected, occupancy,
         measured_delay)``.  Measured paths score model prior + observed
         queueing delay; unmeasured ones fall back to the static
@@ -137,7 +156,7 @@ class PathSelector(TierBackendCompat):
         proj = path.capabilities().projected_seconds(
             nbytes, batch, direction, stage) * max(batch, 1)
         occ = path.occupancy()
-        delay = self._measured_delay(path, stage)
+        delay = self._measured_delay(path, stage, telemetry)
         if delay is None:
             return (proj * (1.0 + self.occupancy_penalty * occ),
                     proj, occ, None)
@@ -159,8 +178,9 @@ class PathSelector(TierBackendCompat):
         ranking without any placement changing), with no decision
         recorded since nothing is being placed."""
         cands = list(candidates)
+        tel = self._snapshot_telemetry(cands, stage)
         return sorted(cands, key=lambda p: self._score_path(
-            p, nbytes, batch, direction, stage)[0])
+            p, nbytes, batch, direction, stage, tel)[0])
 
     def select(self, nbytes: int, batch: int = 1,
                direction: Direction = Direction.C2H, op: str = "write",
@@ -169,10 +189,12 @@ class PathSelector(TierBackendCompat):
                ) -> MemoryPath:
         cands = list(candidates) if candidates is not None else (
             self.paths if stage else (self._paged or self.paths))
+        tel = self._snapshot_telemetry(cands, stage)
         scores, projected, occ, observed = {}, {}, {}, {}
         for p in cands:
             (scores[p.name], projected[p.name], occ[p.name],
-             delay) = self._score_path(p, nbytes, batch, direction, stage)
+             delay) = self._score_path(p, nbytes, batch, direction,
+                                       stage, tel)
             if delay:
                 observed[p.name] = delay
         chosen = min(cands, key=lambda p: scores[p.name])
@@ -182,6 +204,10 @@ class PathSelector(TierBackendCompat):
                 direction=direction.value, scores=scores,
                 projected=projected, occupancy=occ, chosen=chosen.name,
                 measured=bool(observed), observed=observed))
+        if obs.trace.enabled():
+            obs.instant("path.decision", op=op, nbytes=int(nbytes),
+                        batch=int(batch), direction=direction.value,
+                        chosen=chosen.name, measured=bool(observed))
         return chosen
 
     @property

@@ -27,6 +27,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro import obs
 from repro.core.channels import CompletionMode, Transfer
 
 
@@ -100,8 +101,10 @@ class MemoryEngine:
 
     def stats(self) -> dict:
         """Unified `{path, bytes_moved, ops, projected_s, ...}` schema
-        (mechanism detail — channels, queues, members — nests below)."""
-        return self.path.stats()
+        (mechanism detail — channels, queues, members — nests below);
+        numeric leaves mirror into ``engine.*`` registry gauges when
+        live metrics are on (dict keys remain the stable aliases)."""
+        return obs.export_stats("engine", self.path.stats())
 
     def close(self) -> None:
         """Idempotent; only closes a path this engine constructed (shared

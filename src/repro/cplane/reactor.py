@@ -20,9 +20,11 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Iterable, Optional
 
+from repro import obs
 from repro.cplane.completion import Completion, CompletionState
 
 
@@ -42,9 +44,18 @@ class SourceTelemetry:
     ewma_latency_s: float = 0.0
     ewma_nbytes: float = 0.0
     last_latency_s: float = 0.0
+    total_latency_s: float = 0.0        # sum of completion latencies
+    sync_ops: int = 0                   # samples fed via record()
 
     @property
     def ewma_gbps(self) -> float:
+        if self.completed > 0 and self.sync_ops >= self.completed \
+                and self.total_latency_s > 0:
+            # every sample came through record() — a one-shot op whose
+            # latency covers exactly its bytes — so the honest aggregate
+            # is bytes-weighted (total bytes / total busy seconds); the
+            # ratio of two EWMAs would overweight small recent ops
+            return self.bytes_moved / self.total_latency_s / 1e9
         if self.ewma_latency_s <= 0:
             return 0.0
         return self.ewma_nbytes / self.ewma_latency_s / 1e9
@@ -132,6 +143,7 @@ class Reactor:
                 st.cancelled += 1
             st.bytes_moved += nbytes
             st.last_latency_s = latency_s
+            st.total_latency_s += latency_s
             if st.completed == 1:
                 st.ewma_latency_s = latency_s
                 st.ewma_nbytes = float(nbytes)
@@ -139,7 +151,27 @@ class Reactor:
                 st.ewma_latency_s = a * latency_s + \
                     (1 - a) * st.ewma_latency_s
                 st.ewma_nbytes = a * nbytes + (1 - a) * st.ewma_nbytes
+            mode = st.mode
+        if obs.active():
+            self._observe(source, mode, latency_s, nbytes, state)
         return None
+
+    def _observe(self, source: str, mode: str, latency_s: float,
+                 nbytes: int, state: CompletionState) -> None:
+        """Obs-plane wiring per settled completion: a retroactive span
+        (submit -> settle) on the source's trace track — which is how
+        every access path, verbs doorbell, and fabric member shows up in
+        one trace for free — plus a latency histogram sample when live
+        metrics are on.  Only runs behind ``obs.active()``."""
+        obs.complete(source, time.perf_counter() - latency_s, latency_s,
+                     track=f"src:{source}",
+                     args={"nbytes": nbytes, "mode": mode,
+                           "state": state.value})
+        if obs.metrics.live():
+            reg = obs.default_registry()
+            reg.histogram(f"cplane.{source}.latency_s").record(latency_s)
+            if nbytes:
+                reg.counter(f"cplane.{source}.bytes").inc(nbytes)
 
     def record(self, source: str, latency_s: float, nbytes: int = 0,
                ok: bool = True) -> None:
@@ -155,6 +187,7 @@ class Reactor:
                 return          # sample must not resurrect a source its
             st.submitted += 1   # owner already unregistered
             st.inflight += 1
+            st.sync_ops += 1
         self.on_complete(source, latency_s, nbytes,
                          CompletionState.DONE if ok
                          else CompletionState.ERROR)
@@ -176,6 +209,18 @@ class Reactor:
             st = self._sources.get(source)
             return st.snapshot() if st is not None else None
 
+    def stats_many(self, sources: Iterable[str]
+                   ) -> Dict[str, SourceTelemetry]:
+        """Consistent snapshot of several sources under ONE lock
+        acquisition (unknown sources are simply absent).  Callers that
+        compare sources — the selector's measured scoring, the fabric
+        manager's median-relative health check — must use this rather
+        than per-source ``stats_for`` loops, or the comparison mixes
+        points in time."""
+        with self._lock:
+            return {s: self._sources[s].snapshot() for s in sources
+                    if s in self._sources}
+
     @staticmethod
     def _as_dict(s: SourceTelemetry) -> dict:
         return {"mode": s.mode, "submitted": s.submitted,
@@ -185,7 +230,9 @@ class Reactor:
                 "ewma_latency_s": s.ewma_latency_s,
                 "ewma_nbytes": s.ewma_nbytes,
                 "ewma_gbps": s.ewma_gbps,
-                "last_latency_s": s.last_latency_s}
+                "last_latency_s": s.last_latency_s,
+                "total_latency_s": s.total_latency_s,
+                "sync_ops": s.sync_ops}
 
     def source_telemetry(self, source: str) -> Optional[dict]:
         """One source's counters as a dict — the O(1) lookup stats()
@@ -194,7 +241,10 @@ class Reactor:
         return self._as_dict(st) if st is not None else None
 
     def telemetry(self) -> Dict[str, dict]:
-        """Snapshot of every source's counters (for stats()/benches)."""
+        """Snapshot of every source's counters (for stats()/benches).
+        All sources are captured under ONE lock acquisition, so the
+        returned dict is a single consistent point in time — cross-source
+        comparisons (fleet medians, share-of-traffic) are meaningful."""
         with self._lock:
             snaps = {n: st.snapshot() for n, st in self._sources.items()}
         return {n: self._as_dict(s) for n, s in snaps.items()}

@@ -28,6 +28,7 @@ import statistics
 import time
 from typing import Dict, List, Sequence
 
+from repro import obs
 from repro.access.path import MemoryPath
 from repro.cplane import wait_all
 from repro.fabric.placement import RebalancePlan, plan_rebalance
@@ -75,9 +76,16 @@ class FabricManager:
         records per member: members whose completion-latency EWMA runs
         ``threshold``× above the fleet median (with enough samples to
         trust it) are flagged as stragglers."""
+        srcs = {n: self.fabric.source_of(n)
+                for n in self.fabric.alive_members()}
+        # one-lock snapshot: a per-member stats_for loop would compare
+        # EWMAs sampled at different instants, and the median-relative
+        # check is exactly the kind of cross-source comparison that
+        # mixing points in time corrupts
+        snaps = self.reactor.stats_many(srcs.values())
         lats = {}
-        for n in self.fabric.alive_members():
-            st = self.reactor.stats_for(self.fabric.source_of(n))
+        for n, src in srcs.items():
+            st = snaps.get(src)
             if st is not None and st.completed >= self.warmup:
                 lats[n] = st.ewma_latency_s
         if len(lats) < 2:
@@ -149,9 +157,15 @@ class FabricManager:
         self.fabric.mark_failed(name)
         survivors = [m for m in self.fabric.ring.members if m != name]
         plan = self._plan(survivors, strict=strict)
-        stats = self._execute(plan)
-        self.fabric.commit_ring(self.fabric.ring.with_members(survivors))
+        with obs.span("fabric.repair", member=name,
+                      moves=plan.moved_pages):
+            stats = self._execute(plan)
+            self.fabric.commit_ring(
+                self.fabric.ring.with_members(survivors))
         stats["failed_member"] = name
+        self.fabric.record_event("repair", member=name,
+                                 copies=stats["copies_executed"],
+                                 seconds=stats["seconds"])
         return stats
 
     kill = fail_node                        # the serve/bench spelling
@@ -167,14 +181,24 @@ class FabricManager:
         if not new_members:
             raise FabricUnavailable("rebalance would empty the fabric")
         plan = self._plan(new_members, strict=strict)
-        stats = self._execute(plan)
-        self.fabric.commit_ring(self.fabric.ring.with_members(new_members))
+        with obs.span("fabric.rebalance", added=len(added),
+                      removed=len(remove), moves=plan.moved_pages):
+            stats = self._execute(plan)
+            self.fabric.commit_ring(
+                self.fabric.ring.with_members(new_members))
         stats["added"] = added
         stats["removed"] = list(remove)
+        self.fabric.record_event("rebalance", added=added,
+                                 removed=list(remove),
+                                 copies=stats["copies_executed"],
+                                 seconds=stats["seconds"])
         return stats
 
     def stats(self) -> dict:
-        return {"suspects": list(self.suspects),
-                "repairs": list(self.repairs),
-                "epoch": self.fabric.epoch,
-                "failed": self.fabric.failed_members}
+        return obs.export_stats("fabric.manager", {
+            "suspects": list(self.suspects),
+            "repairs": list(self.repairs),
+            "n_suspects": len(self.suspects),
+            "n_repairs": len(self.repairs),
+            "epoch": self.fabric.epoch,
+            "failed": self.fabric.failed_members})

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.access.path import (MemoryPath, PathCapabilities,
                                TierBackendCompat, unified_stats)
 from repro.access.selector import PathSelector
@@ -108,6 +109,11 @@ class ShardedPath(TierBackendCompat):
         self.quorum_reads = 0
         self.rebalances = 0
         self.pages_moved = 0
+        # membership-change event log (fail / ring_flip / epoch bumps,
+        # plus the manager's repair/rebalance entries): consumers —
+        # serve, mainly — drain it and correlate with their own clock
+        # (decode step numbers).  Bounded by being drained, not capped.
+        self.events: List[dict] = []
         self._closed = False
 
     # -- membership ------------------------------------------------------
@@ -134,6 +140,26 @@ class ShardedPath(TierBackendCompat):
         """The reactor telemetry source for one member."""
         return self._sources[name]
 
+    def record_event(self, kind: str, **fields) -> dict:
+        """Append a membership/control event (``fail``, ``ring_flip``,
+        ``epoch``, manager ``repair``/``rebalance``) stamped with the
+        current epoch, mirrored to the trace as ``fabric.<kind>``."""
+        ev = {"kind": kind, "epoch": self.epoch,
+              "t": time.perf_counter(), **fields}
+        with self._lock:
+            self.events.append(ev)
+        if obs.trace.enabled():
+            obs.instant(f"fabric.{kind}",
+                        **{k: v for k, v in ev.items() if k != "t"})
+        return ev
+
+    def drain_events(self) -> List[dict]:
+        """Pop and return every recorded event (consumers tag them with
+        their own clock — serve uses decode step numbers)."""
+        with self._lock:
+            evs, self.events = self.events, []
+        return evs
+
     def _bump_epoch(self) -> None:
         self.epoch += 1
         # stamp the new membership epoch down into every member's
@@ -143,6 +169,7 @@ class ShardedPath(TierBackendCompat):
             amap = getattr(getattr(m, "backend", None), "amap", None)
             if amap is not None:
                 amap.set_epoch(self.epoch)
+        self.record_event("epoch")
 
     def mark_failed(self, name: str) -> None:
         """Fail-stop ``name`` at the routing plane: it leaves every
@@ -157,6 +184,8 @@ class ShardedPath(TierBackendCompat):
             raise FabricUnavailable("cannot fail the last alive member")
         self._failed.add(name)
         self._bump_epoch()
+        self.record_event("fail", member=name,
+                          alive=len(alive_after))
 
     def add_member(self, path: MemoryPath) -> str:
         """Attach a new member path (explicitly addressable for the
@@ -185,6 +214,8 @@ class ShardedPath(TierBackendCompat):
             self.ring = ring
         self.rebalances += 1
         self._bump_epoch()
+        self.record_event("ring_flip", members=list(ring.members),
+                          replicas=ring.replicas)
 
     # -- routing ---------------------------------------------------------
     def _check(self, page: int) -> None:
@@ -218,6 +249,12 @@ class ShardedPath(TierBackendCompat):
                 f"({self.ring.owners(page)} all failed)")
         if self.ring.owners(page)[0] not in owners:
             self.failovers += 1
+            # instant only (no events-list entry): per-read failovers on
+            # a dead primary would grow the drained log without bound
+            if obs.trace.enabled():
+                obs.instant("fabric.failover", page=page,
+                            primary=self.ring.owners(page)[0],
+                            alive=len(owners))
         if len(owners) == 1:
             return owners[0]
         ranked = self._scorer.rank([self._members[n] for n in owners],
@@ -434,7 +471,7 @@ class ShardedPath(TierBackendCompat):
                for k in ("bytes_stored", "bytes_loaded", "store_ops",
                          "load_ops", "store_batches", "load_batches",
                          "stage_bytes", "stage_ops")}
-        return unified_stats(
+        return obs.export_stats("fabric", unified_stats(
             self.name,
             bytes_moved=sum(m["bytes_moved"] for m in members.values()),
             ops=sum(m["ops"] for m in members.values()),
@@ -449,7 +486,7 @@ class ShardedPath(TierBackendCompat):
             failovers=self.failovers, quorum_reads=self.quorum_reads,
             rebalances=self.rebalances, pages_moved=self.pages_moved,
             fabric_telemetry={n: t for n, t in telemetry.items()
-                              if t is not None})
+                              if t is not None}))
 
     def close(self) -> None:
         if self._closed:

@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import cplane
+from repro import cplane, obs
 from repro.access.registry import create_path
 from repro.access.selector import PathSelector
 from repro.configs import ARCHS, get_config, reduce_for_smoke
@@ -81,6 +81,10 @@ class Request:
     t_submit: float = 0.0
     t_done: float = 0.0
     failed: Optional[str] = None       # rejection reason (engine kept going)
+    # monotonic lifecycle clocks (perf_counter): submit -> first token
+    # is TTFT, first token -> done over the remaining tokens is TPOT
+    t_submit_pc: float = 0.0
+    t_first_pc: float = 0.0
 
 
 class ServeEngine:
@@ -158,7 +162,18 @@ class ServeEngine:
         self.fabric = None                  # ShardedPath when sharded
         self.fabric_mgr = None
         self.killed_member: Optional[str] = None
+        self.kill_step: Optional[int] = None
         self._step_no = 0
+        # per-request latency distributions (always on: one record per
+        # request lifecycle event, nowhere near the hot decode loop).
+        # TTFT = submit -> first token (prefill + paging + queueing);
+        # TPOT = (done - first) / (tokens - 1), the decode cadence.
+        self.ttft_hist = obs.LogHistogram()
+        self.tpot_hist = obs.LogHistogram()
+        # fabric membership events drained per step and stamped with the
+        # decode step they landed in (when the kill hit, relative to
+        # decode progress — satellite of DESIGN.md §8)
+        self.fabric_events: List[dict] = []
         if access_path is not None:
             self._cache_template = T.init_cache(cfg, 1, max_len)
             page_bytes = sum(l.nbytes
@@ -189,7 +204,10 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.time()
+        req.t_submit_pc = time.perf_counter()
         req.out_tokens = []
+        obs.async_begin("serve.request", req.rid,
+                        prompt_len=len(req.prompt), max_new=req.max_new)
         self.queue.put(req)
 
     def _slot_cache_set(self, slot: int, new_caches) -> None:
@@ -269,6 +287,8 @@ class ServeEngine:
                                    f"{self.max_len}")
                     cand.t_done = time.time()
                     self.done.append(cand)
+                    obs.async_end("serve.request", cand.rid,
+                                  rejected=True)
                     continue
                 req = cand
             if req is None:
@@ -279,15 +299,18 @@ class ServeEngine:
                     self.cfg.attention.mrope_sections is not None:
                 batch["pos"] = jnp.broadcast_to(
                     jnp.arange(P, dtype=jnp.int32)[None, :, None], (1, P, 3))
-            caches1 = T.init_cache(self.cfg, 1, self.max_len)
-            caches1, logits = self.prefill_1(self.params, batch, caches1)
-            tok = int(jnp.argmax(logits[0]))
-            if self.pager is not None:
-                leaves, treedef = jax.tree.flatten(caches1)
-                self._page_store(s, leaves)
-                self._pending_install[s] = (req, tok, leaves, treedef)
-            else:
-                admitted.append((s, req, tok, caches1, None))
+            with obs.span("serve.prefill", rid=req.rid, slot=s,
+                          prompt_len=P):
+                caches1 = T.init_cache(self.cfg, 1, self.max_len)
+                caches1, logits = self.prefill_1(self.params, batch,
+                                                 caches1)
+                tok = int(jnp.argmax(logits[0]))
+                if self.pager is not None:
+                    leaves, treedef = jax.tree.flatten(caches1)
+                    self._page_store(s, leaves)
+                    self._pending_install[s] = (req, tok, leaves, treedef)
+                else:
+                    admitted.append((s, req, tok, caches1, None))
         for s, req, tok, caches1, _ in admitted:    # non-paged: inline
             self._install(s, req, tok, caches1)
 
@@ -298,6 +321,16 @@ class ServeEngine:
         self.slot_pos[s] = len(req.prompt)
         self.cur_tokens[s, 0] = tok
         req.out_tokens.append(tok)
+        # first token lands here: TTFT covers queueing + prefill + the
+        # whole paging round trip (spill, cold fetch, H2C, install)
+        req.t_first_pc = time.perf_counter()
+        ttft = req.t_first_pc - req.t_submit_pc
+        self.ttft_hist.record(ttft)
+        if obs.metrics.live():
+            obs.default_registry().histogram("serve.ttft_s").record(ttft)
+        if obs.trace.enabled():
+            obs.instant("serve.first_token", rid=req.rid, slot=s,
+                        ttft_s=ttft)
 
     def _install_ready(self, have_active: bool) -> None:
         """Move pending-install slots whose page fetch has settled into
@@ -347,8 +380,9 @@ class ServeEngine:
                 self.blocking_installs += 1
         for s in ready:
             req, tok, leaves, treedef = self._pending_install.pop(s)
-            caches1 = self._page_fetch(s, leaves, treedef)
-            self._install(s, req, tok, caches1)
+            with obs.span("serve.install", rid=req.rid, slot=s):
+                caches1 = self._page_fetch(s, leaves, treedef)
+                self._install(s, req, tok, caches1)
 
     def _maybe_kill_node(self) -> None:
         """Fail one fabric member at the configured step (fault
@@ -360,9 +394,35 @@ class ServeEngine:
                 self._step_no < self.kv_kill_step:
             return
         victim = self.fabric.alive_members()[-1]
+        if obs.trace.enabled():
+            obs.instant("serve.kill", member=victim, step=self._step_no)
         repair = self.fabric_mgr.kill(victim)
         self.killed_member = victim
+        self.kill_step = self._step_no
         self.kill_repair = repair
+
+    def _finish(self, req: Request) -> None:
+        req.t_done = time.time()
+        self.done.append(req)
+        n = len(req.out_tokens)
+        if req.t_first_pc > 0.0 and n > 1:
+            tpot = (time.perf_counter() - req.t_first_pc) / (n - 1)
+            self.tpot_hist.record(tpot)
+            if obs.metrics.live():
+                obs.default_registry().histogram(
+                    "serve.tpot_s").record(tpot)
+        obs.async_end("serve.request", req.rid, tokens=n)
+
+    def _drain_fabric_events(self) -> None:
+        """Stamp the fabric's membership events (fail / epoch / ring
+        flip / repair) with the decode step they landed in — the serve
+        result's answer to "when did the kill hit, relative to decode
+        progress"."""
+        if self.fabric is None:
+            return
+        for ev in self.fabric.drain_events():
+            ev["step"] = self._step_no
+            self.fabric_events.append(ev)
 
     def step(self) -> int:
         """One batched decode step; returns #active slots."""
@@ -372,18 +432,23 @@ class ServeEngine:
         if self.pager is not None:
             have_active = any(r is not None for r in self.slot_req)
             self._install_ready(have_active)
+        self._drain_fabric_events()
         active = [s for s in range(self.B) if self.slot_req[s] is not None]
         if not active:
             return 0
-        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
-        batch = {"tokens": jnp.asarray(self.cur_tokens)}
-        if self.cfg.attention is not None and \
-                self.cfg.attention.mrope_sections is not None:
-            batch["pos"] = jnp.broadcast_to(pos[..., None], (self.B, 1, 3))
-        else:
-            batch["pos"] = pos
-        self.caches, logits = self.decode(self.params, batch, self.caches)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        with obs.span("serve.decode_step", step=self._step_no,
+                      active=len(active)):
+            pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
+            batch = {"tokens": jnp.asarray(self.cur_tokens)}
+            if self.cfg.attention is not None and \
+                    self.cfg.attention.mrope_sections is not None:
+                batch["pos"] = jnp.broadcast_to(pos[..., None],
+                                                (self.B, 1, 3))
+            else:
+                batch["pos"] = pos
+            self.caches, logits = self.decode(self.params, batch,
+                                              self.caches)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for s in active:
             tok = int(nxt[s])
             req = self.slot_req[s]
@@ -391,8 +456,7 @@ class ServeEngine:
             self.slot_pos[s] += 1
             self.slot_left[s] -= 1
             if self.slot_left[s] <= 0:
-                req.t_done = time.time()
-                self.done.append(req)
+                self._finish(req)
                 self.slot_req[s] = None
                 if self.pager is not None:
                     self.pager.release(s)
@@ -467,7 +531,19 @@ def main(argv=None) -> dict:
                          "once per doorbell on the verbs path (the "
                          "in-container hop is µs where a loaded RTT is "
                          "ms; this knob restores that regime)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing and write a Chrome trace-event "
+                         "JSON here (loadable in Perfetto / "
+                         "chrome://tracing; DESIGN.md §8)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable live metrics and embed a registry "
+                         "snapshot in the result dict")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs.trace.enable()
+    if args.metrics:
+        obs.metrics.enable_live()
 
     access = args.access_path
     if args.kv_backend is not None:
@@ -513,12 +589,20 @@ def main(argv=None) -> dict:
     print(f"[serve] {len(served)} requests ({len(failed)} rejected), "
           f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s), "
           f"p50 latency {np.median(lat):.2f}s", flush=True)
+    lat_sum = {"ttft_s": eng.ttft_hist.summary(),
+               "tpot_s": eng.tpot_hist.summary()}
+    print(f"[serve:latency] ttft p50={lat_sum['ttft_s']['p50']*1e3:.1f}ms "
+          f"p95={lat_sum['ttft_s']['p95']*1e3:.1f}ms "
+          f"p99={lat_sum['ttft_s']['p99']*1e3:.1f}ms | "
+          f"tpot p50={lat_sum['tpot_s']['p50']*1e3:.2f}ms "
+          f"p99={lat_sum['tpot_s']['p99']*1e3:.2f}ms", flush=True)
     result = {"requests": len(served), "tokens": toks, "seconds": dt,
               "tok_per_s": toks / dt, "rejected": len(failed),
               "access_path": eng.access_path, "undrained": undrained,
               "overlap": eng.overlap,
               "overlap_installs": eng.overlap_installs,
               "blocking_installs": eng.blocking_installs,
+              "latency": lat_sum,
               "outputs": {r.rid: list(r.out_tokens) for r in served}}
     if eng.pager is not None:
         kv = eng.pager.stats()
@@ -530,6 +614,7 @@ def main(argv=None) -> dict:
               f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
               flush=True)
         if eng.fabric is not None:
+            eng._drain_fabric_events()      # anything after the last step
             fs = eng.fabric.stats()
             result["fabric"] = {
                 "shards": eng.kv_shards, "replicas": eng.kv_replicas,
@@ -538,6 +623,8 @@ def main(argv=None) -> dict:
                 "replicated_writes": fs["replicated_writes"],
                 "pages_moved": fs["pages_moved"],
                 "killed": eng.killed_member,
+                "kill_step": eng.kill_step,
+                "events": list(eng.fabric_events),
                 "repair": getattr(eng, "kill_repair", None)}
             print(f"[serve:fabric] shards={eng.kv_shards} "
                   f"replicas={eng.kv_replicas} epoch={fs['epoch']} "
@@ -555,6 +642,12 @@ def main(argv=None) -> dict:
                  "model_argmin": d.model_argmin} for d in trace]
         result["kv"] = kv
         eng.pager.close()
+    if args.metrics:
+        result["metrics"] = obs.default_registry().snapshot()
+    if args.trace_out:
+        n_ev = obs.trace.export(args.trace_out)
+        print(f"[serve:trace] wrote {n_ev} events to {args.trace_out}",
+              flush=True)
     return result
 
 

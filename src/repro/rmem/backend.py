@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional, Protocol, Sequence, \
 
 import numpy as np
 
+from repro import obs
 from repro.core.analytical import (PathModel, doorbell_bandwidth_gbps,
                                    far_memory_path, tpu_host_path)
 from repro.core.channels import CompletionMode, Direction
@@ -254,19 +255,23 @@ class _AccountingMixin:
     def _base_stats(self) -> dict:
         # one nested schema shared with repro.access paths: the unified
         # {path, bytes_moved, ops, projected_s} keys first, then the
-        # per-tier counters the benches/selector drill into
-        return {"path": self.name,
-                "bytes_moved": self.bytes_stored + self.bytes_loaded,
-                "ops": self.store_ops + self.load_ops,
-                "projected_s": self.projected_s,
-                "tier": self.name,
-                "bytes_stored": self.bytes_stored,
-                "bytes_loaded": self.bytes_loaded,
-                "store_ops": self.store_ops,
-                "load_ops": self.load_ops,
-                "store_batches": self.store_batches,
-                "load_batches": self.load_batches,
-                "seconds_busy": self.seconds_busy}
+        # per-tier counters the benches/selector drill into; every
+        # numeric leaf also mirrors into registry gauges under
+        # ``backend.<name>.*`` when live metrics are on (the dict keys
+        # stay as the aliases existing tests/benches read)
+        return obs.export_stats(f"backend.{self.name}", {
+            "path": self.name,
+            "bytes_moved": self.bytes_stored + self.bytes_loaded,
+            "ops": self.store_ops + self.load_ops,
+            "projected_s": self.projected_s,
+            "tier": self.name,
+            "bytes_stored": self.bytes_stored,
+            "bytes_loaded": self.bytes_loaded,
+            "store_ops": self.store_ops,
+            "load_ops": self.load_ops,
+            "store_batches": self.store_batches,
+            "load_batches": self.load_batches,
+            "seconds_busy": self.seconds_busy})
 
 
 class LocalHostBackend(_AccountingMixin):

@@ -35,12 +35,14 @@ cold-tier traffic is accounted by the backend.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.engine import MemoryEngine
 from repro.cplane import Completion, as_completed
 from repro.rmem.backend import LocalHostBackend, PendingIO, TierBackend
@@ -185,6 +187,9 @@ class TieredStore:
         old = self.page_in_slot[s]
         if old is not None:
             self.evictions += 1
+            if obs.trace.enabled():
+                obs.instant("tier.evict", page=old,
+                            dirty=old in self._dirty)
             if old in self._dirty:
                 host = np.asarray(self.engine.read(self.slots[s]).wait())
                 self.c2h_bytes += self.page_bytes
@@ -230,11 +235,12 @@ class TieredStore:
                     and p not in miss:
                 miss.append(p)
         depth = self._fetch_depth(len(miss))
-        for i in range(0, len(miss), depth):
-            group = miss[i:i + depth]
-            io = self.backend.load_many_async(group)
-            for k, p in enumerate(group):
-                self._prefetch[p] = (io, k)
+        with obs.span("tier.prefetch", pages=len(miss), depth=depth):
+            for i in range(0, len(miss), depth):
+                group = miss[i:i + depth]
+                io = self.backend.load_many_async(group)
+                for k, p in enumerate(group):
+                    self._prefetch[p] = (io, k)
         self.prefetch_issued += len(miss)
         return miss
 
@@ -266,6 +272,7 @@ class TieredStore:
         land — while later groups' cold fetches are still in flight.
         Prefetched pages join their already-running fetch.
         """
+        t0 = time.perf_counter()
         if len(set(pages)) > self.n_hot_slots:
             raise ValueError(f"requested {len(set(pages))} pages > "
                              f"{self.n_hot_slots} hot slots")
@@ -359,6 +366,13 @@ class TieredStore:
                     self.slots[s] = None
                     self._last_use[s] = 0
             raise
+        if missing and obs.trace.enabled():
+            # retroactive span: misses only, so steady-state hit paths
+            # do not flood the ring with zero-length ensure events
+            obs.complete("tier.ensure", t0, time.perf_counter() - t0,
+                         args={"pages": len(pages),
+                               "miss": len(missing),
+                               "prefetch_hits": len(fetched)})
         out = {}
         for p in pages:
             s = self.slot_of_page[p]
@@ -411,16 +425,17 @@ class TieredStore:
             + self.backend.projected_seconds(self.page_bytes,
                                              max(avg_load_batch, 1.0))
             * load_ops)
-        return {"h2c_bytes": self.h2c_bytes, "c2h_bytes": self.c2h_bytes,
-                "page_bytes": self.page_bytes, "cold": cold,
-                "cold_bytes_moved": moved,
-                "cold_projected_seconds": projected,
-                "evictions": self.evictions,
-                "clean_evictions": self.clean_evictions,
-                "dirty_evictions": self.evictions - self.clean_evictions,
-                "writeback_bytes_skipped": self.writeback_bytes_skipped,
-                "prefetch_issued": self.prefetch_issued,
-                "prefetch_hits": self.prefetch_hits}
+        return obs.export_stats("tier", {
+            "h2c_bytes": self.h2c_bytes, "c2h_bytes": self.c2h_bytes,
+            "page_bytes": self.page_bytes, "cold": cold,
+            "cold_bytes_moved": moved,
+            "cold_projected_seconds": projected,
+            "evictions": self.evictions,
+            "clean_evictions": self.clean_evictions,
+            "dirty_evictions": self.evictions - self.clean_evictions,
+            "writeback_bytes_skipped": self.writeback_bytes_skipped,
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_hits": self.prefetch_hits})
 
     def close(self) -> None:
         for io, _ in list(self._prefetch.values()):
