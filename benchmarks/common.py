@@ -11,16 +11,33 @@ from repro import obs
 
 ROWS: List[str] = []
 
+# the run's RNG seed (``benchmarks.run --seed``); every benchmark draws
+# from seeded generators, and every BENCH_*.json records which seed so
+# a gate failure names the exact reproducible run
+_BENCH_SEED = 0
+
+
+def set_bench_seed(seed: int) -> None:
+    global _BENCH_SEED
+    _BENCH_SEED = int(seed)
+
+
+def bench_seed() -> int:
+    return _BENCH_SEED
+
 
 def write_bench_json(path: str, payload: dict) -> dict:
     """Write a ``BENCH_*.json`` with the obs metrics snapshot embedded.
 
     Every bench artifact carries the process-wide registry state under a
-    ``"metrics"`` key (empty dict when nothing was recorded), so CI runs
-    keep the distributions next to the numbers they gate on.  Returns
-    the payload (with the snapshot) for callers that keep using it.
+    ``"metrics"`` key (empty dict when nothing was recorded) and the
+    run's RNG ``"seed"``, so CI runs keep the distributions — and the
+    exact reproduction recipe — next to the numbers they gate on.
+    Returns the payload (with the snapshot) for callers that keep
+    using it.
     """
     payload.setdefault("metrics", obs.default_registry().snapshot())
+    payload.setdefault("seed", bench_seed())
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"# wrote {path}", flush=True)

@@ -12,9 +12,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (completion_modes, contention, e2e_step, fabric,
-                        far_memory, host_device_bw, offload_step, overlap,
-                        rdma_analogue, vmem_stream)
+from benchmarks import (chaos, common, completion_modes, contention,
+                        e2e_step, fabric, far_memory, host_device_bw,
+                        offload_step, overlap, rdma_analogue, vmem_stream)
 from repro import obs
 
 MODULES = [
@@ -27,6 +27,7 @@ MODULES = [
     ("farmem_tier_sweep", far_memory),
     ("serve_overlap", overlap),
     ("fabric_sweep", fabric),
+    ("chaos_soak", chaos),
     ("e2e_and_roofline", e2e_step),
 ]
 
@@ -46,6 +47,13 @@ def main(argv=None) -> None:
     ap.add_argument("--fabric-json", default="",
                     help="fabric sweep JSON path (fabric module); "
                          "defaults to BENCH_fabric.json with --smoke")
+    ap.add_argument("--chaos-json", default="",
+                    help="chaos soak JSON path (chaos module); "
+                         "defaults to BENCH_chaos.json with --smoke")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed recorded in every BENCH_*.json "
+                         "(all benchmark generators are seeded; the "
+                         "artifact names the reproducible run)")
     ap.add_argument("--trace-out", default="", metavar="PATH",
                     help="enable tracing and write a Chrome trace-event "
                          "JSON of the whole run (Perfetto-loadable)")
@@ -55,6 +63,7 @@ def main(argv=None) -> None:
                          "with --smoke)")
     args = ap.parse_args(argv)
     quick = args.quick or args.smoke
+    common.set_bench_seed(args.seed)
     if args.trace_out:
         obs.trace.enable()
     if args.metrics or args.smoke:
@@ -65,6 +74,8 @@ def main(argv=None) -> None:
                                       if args.smoke else "")
     fabric_out = args.fabric_json or ("BENCH_fabric.json"
                                       if args.smoke else "")
+    chaos_out = args.chaos_json or ("BENCH_chaos.json"
+                                    if args.smoke else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -77,6 +88,8 @@ def main(argv=None) -> None:
                 mod.run(quick=quick, out=json_out, select_out=select_out)
             elif fabric_out and mod is fabric:
                 mod.run(quick=quick, out=fabric_out)
+            elif chaos_out and mod is chaos:
+                mod.run(quick=quick, out=chaos_out)
             else:
                 mod.run(quick=quick)
         except Exception:

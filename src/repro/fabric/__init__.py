@@ -24,8 +24,9 @@ from repro.fabric.sharded_path import (FabricUnavailable, QuorumError,
 
 def create_fabric(n_pages: int = 0, page_bytes: int = 0, shards: int = 2,
                   replicas: int = 1, member: str = "xdma",
-                  vnodes: int = 64, policy=None,
-                  fabric_reactor=None, **member_kw) -> ShardedPath:
+                  vnodes: int = 64, policy=None, fabric_reactor=None,
+                  retry=None, integrity: bool = False,
+                  **member_kw) -> ShardedPath:
     """Build a ``ShardedPath`` of ``shards`` homogeneous members.
 
     ``member`` names any registered access path (``xdma``/``qdma``/
@@ -43,7 +44,8 @@ def create_fabric(n_pages: int = 0, page_bytes: int = 0, shards: int = 2,
             members.append(create_path(member, n_pages=n_pages,
                                        page_bytes=page_bytes, **member_kw))
         return ShardedPath(members, replicas=replicas, policy=policy,
-                           vnodes=vnodes, reactor=fabric_reactor)
+                           vnodes=vnodes, reactor=fabric_reactor,
+                           retry=retry, integrity=integrity)
     except BaseException:
         # a failed ShardedPath constructor (bad replicas, geometry...)
         # must not strand member threads/pools any more than a failed

@@ -153,7 +153,13 @@ class FabricManager:
         destroyed is re-created on the survivor ring from surviving
         sources, and the survivor ring commits.  On ``FabricDataLoss``
         the member STAYS failed (it is dead either way) and no repair
-        runs — the orphaned pages are named in the exception."""
+        runs — the orphaned pages are named in the exception.
+
+        Idempotent: failing an already-failed member is a no-op — the
+        repair already ran (or is running) and must not start twice."""
+        if name in self.fabric.failed_members:
+            return {"noop": True, "failed_member": name,
+                    "copies_executed": 0}
         self.fabric.mark_failed(name)
         survivors = [m for m in self.fabric.ring.members if m != name]
         plan = self._plan(survivors, strict=strict)
@@ -169,6 +175,95 @@ class FabricManager:
         return stats
 
     kill = fail_node                        # the serve/bench spelling
+
+    def recover_node(self, name: str, strict: bool = True) -> dict:
+        """Bring a flapped member back: rejoin it at the routing plane,
+        re-copy every replica its ring position owns (its data is stale
+        — written pages moved on without it), then commit the ring that
+        includes it.  No-op if the member was never failed."""
+        if name not in self.fabric.failed_members:
+            return {"noop": True, "recovered_member": name,
+                    "copies_executed": 0}
+        self.fabric.mark_recovered(name)
+        new_members = list(dict.fromkeys(
+            list(self.fabric.ring.members) + [name]))
+        plan = self._plan(new_members, strict=strict)
+        with obs.span("fabric.recover", member=name,
+                      moves=plan.moved_pages):
+            stats = self._execute(plan)
+            self.fabric.commit_ring(
+                self.fabric.ring.with_members(new_members))
+        stats["recovered_member"] = name
+        self.fabric.record_event("recover_commit", member=name,
+                                 copies=stats["copies_executed"],
+                                 seconds=stats["seconds"])
+        return stats
+
+    def scrub(self) -> dict:
+        """Background integrity pass: read every written page's replica
+        copies, verify them against the fabric checksum plane, and
+        repair bad or missing replicas from a verified good copy —
+        batched through the same miss pipeline as repair (one
+        ``read_many_async`` per member for the audit, one
+        ``write_many_async`` per member for the fixes).  Requires the
+        fabric to be built with ``integrity=True``."""
+        fabric = self.fabric
+        if fabric.checksums is None:
+            return {"checked": 0, "repaired": 0, "unrepairable": 0,
+                    "skipped": "fabric built without integrity"}
+        pages = fabric.written_pages
+        owned: Dict[str, List[int]] = {n: [] for n in
+                                       fabric.alive_members()}
+        for p in pages:
+            for n in fabric.ring.owners(p):
+                if n in owned:
+                    owned[n].append(p)
+        # under-replicated pages get their full owner set re-checked by
+        # the audit below — plus an unconditional re-copy, since a
+        # missing replica verifies trivially nowhere (it was never read)
+        stale = set(fabric.under_replicated_pages)
+        checked = 0
+        bad: Dict[str, List[int]] = {}
+        with obs.span("fabric.scrub", pages=len(pages)):
+            audits = {n: (ps, fabric.member(n).read_many_async(ps))
+                      for n, ps in owned.items() if ps}
+            for n, (ps, io) in audits.items():
+                try:
+                    rows = io.wait()
+                except Exception:
+                    # member unreadable right now: its pages stay under
+                    # suspicion for the next scrub pass
+                    stale.update(ps)
+                    continue
+                checked += len(ps)
+                for i, p in enumerate(ps):
+                    if not fabric.checksums.check(p, rows[i]) or p in stale:
+                        bad.setdefault(n, []).append(p)
+            repaired = 0
+            unrepairable: List[int] = []
+            fixes = []
+            for n, ps in bad.items():
+                good_ps, good_vs = [], []
+                for p in ps:
+                    try:
+                        good_vs.append(fabric._read_verified(
+                            p, exclude={n}))
+                        good_ps.append(p)
+                    except Exception:
+                        unrepairable.append(p)
+                if good_ps:
+                    fixes.append(fabric.member(n).write_many_async(
+                        good_ps, good_vs))
+                    repaired += len(good_ps)
+            wait_all(fixes)
+            with fabric._lock:
+                fabric._under_replicated.difference_update(
+                    p for p in stale if p not in unrepairable)
+        out = {"checked": checked, "repaired": repaired,
+               "unrepairable": len(unrepairable)}
+        fabric.record_event("scrub", **out)
+        self.repairs.append({"scrub": True, **out})
+        return out
 
     def rebalance(self, add: Sequence[MemoryPath] = (),
                   remove: Sequence[str] = (), strict: bool = True) -> dict:

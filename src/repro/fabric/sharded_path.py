@@ -46,6 +46,8 @@ from repro.access.path import (MemoryPath, PathCapabilities,
 from repro.access.selector import PathSelector
 from repro.core.channels import Direction, Transfer
 from repro.cplane import as_completed, default_reactor, wait_all
+from repro.faults.integrity import IntegrityError, PageChecksums
+from repro.faults.retry import RETRIABLE, RetryPolicy
 from repro.fabric.placement import HashRing, PlacementPolicy
 from repro.rmem.backend import PendingIO
 
@@ -65,7 +67,8 @@ class ShardedPath(TierBackendCompat):
 
     def __init__(self, members: Sequence[MemoryPath], replicas: int = 1,
                  policy: Optional[PlacementPolicy] = None, vnodes: int = 64,
-                 reactor=None):
+                 reactor=None, retry: Optional[RetryPolicy] = None,
+                 integrity: bool = False):
         members = list(members)
         if not members:
             raise ValueError("ShardedPath needs at least one member")
@@ -104,6 +107,14 @@ class ShardedPath(TierBackendCompat):
         # per-member scoring: a PathSelector reused purely as the scorer
         # (measured EWMA + occupancy per member), never for placement
         self._scorer = PathSelector(members, reactor=self.reactor)
+        # fault handling (§9): both off by default — the hot paths below
+        # branch on ``is None`` and stay byte-identical when disabled
+        self.retry = retry
+        self.checksums: Optional[PageChecksums] = \
+            PageChecksums() if integrity else None
+        self.integrity_failures = 0         # rows that failed verify
+        self.degraded_writes = 0            # writes that lost a replica
+        self._under_replicated: set = set()  # pages missing a replica copy
         self.replicated_writes = 0          # extra replica copies written
         self.failovers = 0                  # reads served off-primary
         self.quorum_reads = 0
@@ -186,6 +197,21 @@ class ShardedPath(TierBackendCompat):
         self._bump_epoch()
         self.record_event("fail", member=name,
                           alive=len(alive_after))
+
+    def mark_recovered(self, name: str) -> None:
+        """Bring a flapped member back into the routing plane: it
+        rejoins every owner set its ring position grants it.  Pages
+        written while it was down are stale on it until the manager's
+        ``recover_node``/``scrub`` re-copies them — which is why the
+        epoch bumps: stale data behind a new epoch is detectable."""
+        if name not in self._members:
+            raise KeyError(f"unknown member {name!r}")
+        if name not in self._failed:
+            return
+        self._failed.discard(name)
+        self._bump_epoch()
+        self.record_event("recover", member=name,
+                          alive=len(self.alive_members()))
 
     def add_member(self, path: MemoryPath) -> str:
         """Attach a new member path (explicitly addressable for the
@@ -274,26 +300,150 @@ class ShardedPath(TierBackendCompat):
         io.add_callback(lambda _c: self._record(
             name, time.perf_counter() - t0, nbytes))
 
+    # -- fault-aware replica plumbing (§9) -------------------------------
+    def _rank_owners(self, owners: List[str], nbytes: int,
+                     batch: int) -> List[str]:
+        if len(owners) <= 1:
+            return owners
+        ranked = self._scorer.rank([self._members[n] for n in owners],
+                                   nbytes, batch, Direction.C2H)
+        return [m.name for m in ranked]
+
+    def _note_integrity(self, page: int, member: str) -> None:
+        # no registry counter here: stats() already mirrors this field
+        # as the `fabric.integrity_failures` gauge, and a same-named
+        # counter would make that export a type clash
+        self.integrity_failures += 1
+        if obs.trace.enabled():
+            obs.instant("faults.integrity", page=page, member=member,
+                        layer="fabric")
+
+    def _read_verified(self, page: int, exclude=frozenset()) -> np.ndarray:
+        """One page, replica-fallback read: try alive owners best-scored
+        first (``PathSelector.rank``); a transient error or checksum
+        mismatch on one replica falls through to the next.  Raises only
+        when every candidate replica fails."""
+        owners = [n for n in self._owners(page) if n not in exclude]
+        if not owners:
+            raise FabricUnavailable(
+                f"page {page}: no alive replica outside {sorted(exclude)}")
+        last: Optional[BaseException] = None
+        for i, n in enumerate(self._rank_owners(owners, self.page_bytes, 1)):
+            try:
+                out = self._attempt_read(n, page)
+            except RETRIABLE as e:
+                last = e
+                if obs.trace.enabled():
+                    obs.instant("fabric.replica_fallback", page=page,
+                                member=n, error=type(e).__name__)
+                continue
+            if i > 0 or exclude:
+                self.failovers += 1
+            return out
+        raise last if last is not None else FabricUnavailable(
+            f"page {page}: all replicas failed")
+
+    def _attempt_read(self, n: str, page: int) -> np.ndarray:
+        """Read ``page`` from member ``n`` (retry-wrapped when a policy
+        is set) and verify it — a mismatch is an ``IntegrityError``, so
+        the retry loop re-reads (in-flight flips heal) before the caller
+        falls over to another replica (at-rest corruption heals there)."""
+        def go():
+            t0 = time.perf_counter()
+            out = self._members[n].read(page)
+            self._record(n, time.perf_counter() - t0, int(out.nbytes))
+            if self.checksums is not None and \
+                    not self.checksums.check(page, out):
+                self._note_integrity(page, n)
+                raise IntegrityError(
+                    f"page {page} on {n}: checksum mismatch")
+            return out
+        if self.retry is not None:
+            return self.retry.call(go, op="fabric.read",
+                                   key=f"read:{n}:{page}", source="fabric")
+        return go()
+
+    def _join_member_io(self, n: str, io: PendingIO, reissue, timeout: float,
+                        op: str, idempotent: bool = True):
+        """Join one member sub-op under the retry policy: the first
+        attempt is the already-issued ``io`` (its overlap is kept); a
+        transient failure re-issues via ``reissue`` on THIS (consumer)
+        thread — never a node thread."""
+        state = {"io": io}
+
+        def join():
+            cur = state.pop("io", None)
+            if cur is None:
+                cur = reissue()
+            return cur.wait(timeout)
+        if self.retry is not None:
+            return self.retry.call(join, op=op, key=f"{op}:{n}",
+                                   idempotent=idempotent, source="fabric")
+        return join()
+
+    def _note_degraded(self, pages: Sequence[int], member: str,
+                       exc: BaseException) -> None:
+        """A replica write failed but at least one owner holds each page:
+        the write succeeds degraded.  The stale/missing replica is
+        remembered so ``FabricManager.scrub()`` re-copies it; checksum
+        verification catches any read that lands on it meanwhile."""
+        # counted on the instance only — stats() mirrors it as the
+        # `fabric.degraded_writes` gauge (a same-named registry counter
+        # would clash with that export)
+        self.degraded_writes += 1
+        with self._lock:
+            self._under_replicated.update(pages)
+        if obs.trace.enabled():
+            obs.instant("fabric.degraded_write", member=member,
+                        pages=len(pages), error=type(exc).__name__)
+
+    @property
+    def under_replicated_pages(self) -> List[int]:
+        with self._lock:
+            return sorted(self._under_replicated)
+
     # -- page ops --------------------------------------------------------
     def write(self, page: int, value: np.ndarray) -> None:
         self._check(page)
         targets = self._write_targets(page)
+        if self.checksums is not None:
+            self.checksums.stamp(page, np.asarray(value))
+        wrote = 0
+        last: Optional[BaseException] = None
         for n in targets:
-            t0 = time.perf_counter()
-            self._members[n].write(page, value)
-            self._record(n, time.perf_counter() - t0,
-                         int(np.asarray(value).nbytes))
+            try:
+                t0 = time.perf_counter()
+                if self.retry is not None:
+                    self.retry.call(
+                        lambda n=n: self._members[n].write(page, value),
+                        op="fabric.write", key=f"write:{n}:{page}",
+                        idempotent=True, source="fabric")
+                else:
+                    self._members[n].write(page, value)
+                self._record(n, time.perf_counter() - t0,
+                             int(np.asarray(value).nbytes))
+                wrote += 1
+            except RETRIABLE as e:
+                if self.retry is None:
+                    raise           # fault handling off: fail loudly
+                last = e
+                self._note_degraded([page], n, e)
+        if wrote == 0:
+            raise last if last is not None else FabricUnavailable(
+                f"page {page}: write failed on every owner")
         with self._lock:
             self._written.add(page)
         self.replicated_writes += len(targets) - 1
 
     def read(self, page: int) -> np.ndarray:
         self._check(page)
-        n = self._pick_reader(page, self.page_bytes, 1)
-        t0 = time.perf_counter()
-        out = self._members[n].read(page)
-        self._record(n, time.perf_counter() - t0, int(out.nbytes))
-        return out
+        if self.retry is None and self.checksums is None:
+            n = self._pick_reader(page, self.page_bytes, 1)
+            t0 = time.perf_counter()
+            out = self._members[n].read(page)
+            self._record(n, time.perf_counter() - t0, int(out.nbytes))
+            return out
+        return self._read_verified(page)
 
     def write_many(self, pages: Sequence[int],
                    values: Sequence[np.ndarray]) -> None:
@@ -316,6 +466,8 @@ class ShardedPath(TierBackendCompat):
             self._check(p)
             targets = self._write_targets(p)
             extra += len(targets) - 1
+            if self.checksums is not None:
+                self.checksums.stamp(p, np.asarray(v))
             for n in targets:
                 ps, vs = per.setdefault(n, ([], []))
                 ps.append(p)
@@ -329,13 +481,40 @@ class ShardedPath(TierBackendCompat):
         with self._lock:
             self._written.update(pages)
         self.replicated_writes += extra
+        if self.retry is None and self.checksums is None:
+            def finalize(timeout: float):
+                wait_all([io for _, io, _ in parts], timeout)
+                return None
+            ios = [io for _, io, _ in parts]
+            reactive = all(getattr(io, "reactive", False) for io in ios)
+            return PendingIO(finalize, deps=ios if reactive else None)
 
-        def finalize(timeout: float):
-            wait_all([io for _, io, _ in parts], timeout)
+        # fault-handling join: eager on purpose — retries/degradation
+        # must run on the consumer's thread, never a node thread (a
+        # re-issue from a node thread can deadlock on its own queue)
+        def finalize_ft(timeout: float):
+            landed: Dict[int, int] = {p: 0 for p in pages}
+            last: Optional[BaseException] = None
+            for n, io, _ in parts:
+                ps, vs = per[n]
+                try:
+                    self._join_member_io(
+                        n, io,
+                        lambda n=n, ps=ps, vs=vs:
+                            self._members[n].write_many_async(ps, vs),
+                        timeout, "fabric.write_many", idempotent=True)
+                except RETRIABLE as e:
+                    last = e
+                    self._note_degraded(ps, n, e)
+                    continue
+                for p in ps:
+                    landed[p] += 1
+            orphans = [p for p, k in landed.items() if k == 0]
+            if orphans:
+                raise last if last is not None else FabricUnavailable(
+                    f"{len(orphans)} pages landed on no owner")
             return None
-        ios = [io for _, io, _ in parts]
-        reactive = all(getattr(io, "reactive", False) for io in ios)
-        return PendingIO(finalize, deps=ios if reactive else None)
+        return PendingIO(finalize_ft)
 
     def read_many(self, pages: Sequence[int]) -> np.ndarray:
         return self.read_many_async(pages).wait()
@@ -363,15 +542,46 @@ class ShardedPath(TierBackendCompat):
                  for n, (rows, ps) in groups.items()]
         for n, _, io, nbytes in parts:
             self._watch(n, io, t0, nbytes)
+        if self.retry is None and self.checksums is None:
+            def finalize(timeout: float):
+                out = np.empty((len(pages), self.page_bytes), np.uint8)
+                for n, rows, io, nbytes in parts:
+                    out[np.asarray(rows, np.int64)] = io.wait(timeout)
+                return out
+            ios = [io for _, _, io, _ in parts]
+            reactive = all(getattr(io, "reactive", False) for io in ios)
+            return PendingIO(finalize, deps=ios if reactive else None,
+                             nbytes=len(pages) * self.page_bytes)
 
-        def finalize(timeout: float):
+        # fault-handling join (eager — see write_many_async): a member
+        # sub-read that stays transiently broken after retries fails
+        # over page-by-page to ranked replicas; a row that fails verify
+        # re-reads on another replica (the verbs-corruption story)
+        def finalize_ft(timeout: float):
             out = np.empty((len(pages), self.page_bytes), np.uint8)
-            for n, rows, io, nbytes in parts:
-                out[np.asarray(rows, np.int64)] = io.wait(timeout)
+            for n, rows, io, _ in parts:
+                ps = groups[n][1]
+                try:
+                    got = self._join_member_io(
+                        n, io,
+                        lambda n=n, ps=ps:
+                            self._members[n].read_many_async(ps),
+                        timeout, "fabric.read_many")
+                except RETRIABLE:
+                    for row, p in zip(rows, ps):
+                        out[row] = self._read_verified(p, exclude={n})
+                    continue
+                out[np.asarray(rows, np.int64)] = got
+                if self.checksums is not None:
+                    for row, p in zip(rows, ps):
+                        if not self.checksums.check(p, out[row]):
+                            self._note_integrity(p, n)
+                            # no exclude: an in-flight flip heals on a
+                            # plain re-read of the same replica (ranked
+                            # fallback still covers at-rest corruption)
+                            out[row] = self._read_verified(p)
             return out
-        ios = [io for _, _, io, _ in parts]
-        reactive = all(getattr(io, "reactive", False) for io in ios)
-        return PendingIO(finalize, deps=ios if reactive else None,
+        return PendingIO(finalize_ft,
                          nbytes=len(pages) * self.page_bytes)
 
     def read_quorum(self, page: int, timeout: float = 30.0) -> np.ndarray:
@@ -485,6 +695,10 @@ class ShardedPath(TierBackendCompat):
             replicated_writes=self.replicated_writes,
             failovers=self.failovers, quorum_reads=self.quorum_reads,
             rebalances=self.rebalances, pages_moved=self.pages_moved,
+            integrity_failures=self.integrity_failures,
+            degraded_writes=self.degraded_writes,
+            under_replicated=len(self._under_replicated),
+            retry=self.retry.stats() if self.retry is not None else {},
             fabric_telemetry={n: t for n, t in telemetry.items()
                               if t is not None}))
 

@@ -42,10 +42,23 @@ the fabric moves where bytes live, never what they are.  The old
 ``--kv-nodes`` flag (verbs-backend node striping) is a deprecated alias
 of ``--kv-shards``.
 
+Chaos mode (DESIGN.md §9): ``--fault-seed``/``--fault-rate``/
+``--fault-corrupt``/``--fault-flap LO:HI`` install a deterministic
+``FaultPlan`` over the whole memory plane for the run.  Faults imply
+paging (there is nothing to inject into otherwise) and switch the
+pager/fabric into fault-handling mode: a ``RetryPolicy`` wraps every
+cold-tier op and per-page checksums verify every fetch (with replica
+fallback when sharded).  A request whose paging op stays failed after
+retries and failover is *shed* — ``Request.failed`` carries the
+reason, the batch keeps decoding everyone else — never an assert.
+Survivors' tokens are bit-exact against the fault-free run
+(``benchmarks/chaos.py`` gates exactly that).
+
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
                   [--kv-paging --access-path auto] [--no-overlap] \
-                  [--kv-shards 4 --kv-replicas 2 --kv-kill-node 5]
+                  [--kv-shards 4 --kv-replicas 2 --kv-kill-node 5] \
+                  [--fault-seed 7 --fault-rate 0.02 --fault-corrupt 0.05]
 """
 from __future__ import annotations
 
@@ -64,6 +77,9 @@ from repro import cplane, obs
 from repro.access.registry import create_path
 from repro.access.selector import PathSelector
 from repro.configs import ARCHS, get_config, reduce_for_smoke
+from repro.faults import injector as _faults
+from repro.faults.injector import FaultPlan
+from repro.faults.retry import RETRIABLE, RetryPolicy
 from repro.models import lm
 from repro.models import transformer as T
 from repro.rmem.store import TieredStore
@@ -95,7 +111,9 @@ class ServeEngine:
                  kv_kill_step: Optional[int] = None,
                  kv_nodes: Optional[int] = None, kv_doorbell: int = 4,
                  overlap: bool = True, overlap_grace_s: float = 0.002,
-                 kv_node_latency_s: float = 0.0):
+                 kv_node_latency_s: float = 0.0,
+                 kv_retry: Optional[RetryPolicy] = None,
+                 kv_integrity: bool = False):
         if kv_backend is not None:
             warnings.warn(
                 "ServeEngine(kv_backend=...) is deprecated; use "
@@ -159,6 +177,12 @@ class ServeEngine:
         self.kv_shards = kv_shards
         self.kv_replicas = kv_replicas
         self.kv_kill_step = kv_kill_step
+        # fault handling (§9): the retry policy + checksum plane live in
+        # whichever layer owns replica routing — the fabric when sharded
+        # (replica fallback needs the ring), the tier store otherwise
+        self.kv_retry = kv_retry
+        self.kv_integrity = kv_integrity
+        self.shed_requests = 0
         self.fabric = None                  # ShardedPath when sharded
         self.fabric_mgr = None
         self.killed_member: Optional[str] = None
@@ -188,7 +212,8 @@ class ServeEngine:
                     replicas=kv_replicas, n_pages=batch_slots,
                     page_bytes=page_bytes, n_channels=2, n_nodes=1,
                     doorbell_batch=kv_doorbell,
-                    node_latency_s=kv_node_latency_s)
+                    node_latency_s=kv_node_latency_s,
+                    retry=kv_retry, integrity=kv_integrity)
                 self.fabric = apath
                 self.fabric_mgr = FabricManager(apath)
             else:
@@ -198,9 +223,14 @@ class ServeEngine:
                                     n_nodes=1,
                                     doorbell_batch=kv_doorbell,
                                     node_latency_s=kv_node_latency_s)
+            # one retry layer, not two: with the fabric retrying (and
+            # failing over) internally, a tier-level policy on top would
+            # multiply attempts for ops the fabric already gave up on
             self.pager = TieredStore(
                 n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
-                n_hot_slots=batch_slots, path=apath)
+                n_hot_slots=batch_slots, path=apath,
+                retry=kv_retry if self.fabric is None else None,
+                integrity=kv_integrity)
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.time()
@@ -307,7 +337,12 @@ class ServeEngine:
                 tok = int(jnp.argmax(logits[0]))
                 if self.pager is not None:
                     leaves, treedef = jax.tree.flatten(caches1)
-                    self._page_store(s, leaves)
+                    try:
+                        self._page_store(s, leaves)
+                    except RETRIABLE as e:
+                        self._shed(req, f"kv page store failed: {e}",
+                                   slot=s)
+                        continue
                     self._pending_install[s] = (req, tok, leaves, treedef)
                 else:
                     admitted.append((s, req, tok, caches1, None))
@@ -331,6 +366,30 @@ class ServeEngine:
         if obs.trace.enabled():
             obs.instant("serve.first_token", rid=req.rid, slot=s,
                         ttft_s=ttft)
+
+    def _shed(self, req: Request, reason: str,
+              slot: Optional[int] = None) -> None:
+        """Degrade instead of crash (§9): a paging op that stayed failed
+        after retries and replica failover sheds THIS request —
+        ``Request.failed`` carries the reason — and the batch keeps
+        decoding everyone else.  Survivors stay bit-exact: a slot's
+        tokens depend only on its own cache."""
+        req.failed = reason
+        req.t_done = time.time()
+        self.done.append(req)
+        self.shed_requests += 1
+        if slot is not None and self.pager is not None:
+            self._pending_install.pop(slot, None)
+            self.pager.drop_prefetch(slot)
+            try:
+                self.pager.release(slot, writeback=False)
+            except Exception:
+                pass        # the page is being abandoned either way
+        if obs.trace.enabled():
+            obs.instant("serve.shed", rid=req.rid, reason=reason)
+        if obs.metrics.live():
+            obs.default_registry().counter("serve.shed_requests").inc()
+        obs.async_end("serve.request", req.rid, shed=True)
 
     def _install_ready(self, have_active: bool) -> None:
         """Move pending-install slots whose page fetch has settled into
@@ -381,7 +440,11 @@ class ServeEngine:
         for s in ready:
             req, tok, leaves, treedef = self._pending_install.pop(s)
             with obs.span("serve.install", rid=req.rid, slot=s):
-                caches1 = self._page_fetch(s, leaves, treedef)
+                try:
+                    caches1 = self._page_fetch(s, leaves, treedef)
+                except RETRIABLE as e:
+                    self._shed(req, f"kv page fetch failed: {e}", slot=s)
+                    continue
                 self._install(s, req, tok, caches1)
 
     def _maybe_kill_node(self) -> None:
@@ -487,6 +550,32 @@ class ServeEngine:
         return left
 
 
+def _fault_scopes(path) -> List[str]:
+    """Every injectable fault scope reachable under ``path``, in member
+    order: fabric members and auto-selector candidates are walked
+    recursively; the leaves are the host backend (``local-host#K``) or
+    the verbs memory nodes (``memnode0#K``).  Resolved AFTER engine
+    construction — scope ids are allocation-ordered, so a flap window
+    must name the scope a *this* engine's path actually got."""
+    members = getattr(path, "_members", None)
+    if members is not None:                   # ShardedPath
+        return [s for m in members.values() for s in _fault_scopes(m)]
+    sub = getattr(path, "paths", None)
+    if sub is not None:                       # PathSelector
+        return [s for p in sub for s in _fault_scopes(p)]
+    be = getattr(path, "backend", None)
+    if be is None:
+        return []
+    fs = getattr(be, "fault_scope", None)
+    if fs is not None:                        # LocalHostBackend
+        return [fs]
+    amap = getattr(be, "amap", None)
+    if amap is not None:                      # RemoteBackend -> its nodes
+        return list(dict.fromkeys(
+            e.node.fault_scope for e in amap.entries))
+    return []
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS), default="qwen2-0.5b")
@@ -531,6 +620,25 @@ def main(argv=None) -> dict:
                          "once per doorbell on the verbs path (the "
                          "in-container hop is µs where a loaded RTT is "
                          "ms; this knob restores that regime)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="install a deterministic FaultPlan with this "
+                         "seed (implies --kv-paging; same seed + "
+                         "topology replays the same fault schedule)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-op probability of an injected transient "
+                         "completion error on the memory plane")
+    ap.add_argument("--fault-timeout-rate", type=float, default=0.0,
+                    help="per-op probability of an injected completion "
+                         "timeout")
+    ap.add_argument("--fault-corrupt", type=float, default=0.0,
+                    help="per-op probability of a payload bit-flip "
+                         "(capped at one flip per run; checksums catch "
+                         "it and replicas heal it when sharded)")
+    ap.add_argument("--fault-flap", default=None, metavar="LO:HI",
+                    help="flap one memory node/backend: its ops in "
+                         "[LO, HI) fail NodeUnavailable (down), then it "
+                         "serves again (up); pair with --kv-replicas 2 "
+                         "so reads fail over meanwhile")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable tracing and write a Chrome trace-event "
                          "JSON here (loadable in Perfetto / "
@@ -559,13 +667,22 @@ def main(argv=None) -> dict:
                       stacklevel=2)
         if kv_shards == 1:
             kv_shards = args.kv_nodes
-    paging = args.kv_paging or access is not None or kv_shards > 1
+    faults_on = (args.fault_seed is not None or args.fault_rate > 0 or
+                 args.fault_timeout_rate > 0 or args.fault_corrupt > 0 or
+                 args.fault_flap is not None)
+    fault_seed = args.fault_seed if args.fault_seed is not None \
+        else args.seed
+    # faults imply paging: the plan injects into the memory plane, so
+    # a chaos run without one would silently test nothing
+    paging = (args.kv_paging or access is not None or kv_shards > 1 or
+              faults_on)
     if paging and access is None:
         access = "xdma"                 # the old local default
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduce_for_smoke(cfg)
     params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(args.seed))
+    retry_policy = RetryPolicy(seed=fault_seed) if faults_on else None
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_len=args.max_len,
                       access_path=access if paging else None,
@@ -573,14 +690,37 @@ def main(argv=None) -> dict:
                       kv_kill_step=args.kv_kill_node,
                       kv_doorbell=args.kv_doorbell,
                       overlap=not args.no_overlap,
-                      kv_node_latency_s=args.kv_node_latency)
+                      kv_node_latency_s=args.kv_node_latency,
+                      kv_retry=retry_policy, kv_integrity=faults_on)
+    plan = flaps = None
+    if faults_on:
+        if args.fault_flap is not None:
+            # the flap names a concrete scope, resolvable only now that
+            # the engine's path tree (and its scope ids) exists; the
+            # LAST member flaps so replicated reads have somewhere to go
+            lo, hi = (int(x) for x in args.fault_flap.split(":"))
+            scopes = _fault_scopes(eng.pager.path)
+            if not scopes:
+                raise SystemExit("--fault-flap: path exposes no "
+                                 "injectable fault scopes")
+            flaps = {scopes[-1]: [(lo, hi)]}
+        plan = _faults.install(FaultPlan(
+            fault_seed, error_rate=args.fault_rate,
+            timeout_rate=args.fault_timeout_rate,
+            corrupt_rate=args.fault_corrupt, flaps=flaps))
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for r in range(args.requests):
         eng.submit(Request(rid=r, prompt=rng.integers(
             0, cfg.vocab, size=args.prompt_len).astype(np.int32),
             max_new=args.max_new))
-    undrained = eng.run_until_drained()
+    try:
+        undrained = eng.run_until_drained()
+    finally:
+        if faults_on:
+            # close the gate before teardown: pager.close writebacks
+            # must not draw from the (now fully consumed) fault schedule
+            _faults.uninstall()
     dt = time.time() - t0
     served = [r for r in eng.done if r.failed is None]
     failed = [r for r in eng.done if r.failed is not None]
@@ -598,12 +738,29 @@ def main(argv=None) -> dict:
           f"p99={lat_sum['tpot_s']['p99']*1e3:.2f}ms", flush=True)
     result = {"requests": len(served), "tokens": toks, "seconds": dt,
               "tok_per_s": toks / dt, "rejected": len(failed),
+              "shed": eng.shed_requests,
               "access_path": eng.access_path, "undrained": undrained,
               "overlap": eng.overlap,
               "overlap_installs": eng.overlap_installs,
               "blocking_installs": eng.blocking_installs,
               "latency": lat_sum,
               "outputs": {r.rid: list(r.out_tokens) for r in served}}
+    if plan is not None:
+        result["faults"] = {
+            "seed": fault_seed, "plan": plan.snapshot(),
+            "flaps": {k: [list(w) for w in v]
+                      for k, v in (flaps or {}).items()},
+            "retry": retry_policy.stats(),
+            "shed": eng.shed_requests,
+            "failed_reasons": {r.rid: r.failed for r in failed}}
+        snap = plan.snapshot()
+        print(f"[serve:faults] seed={fault_seed} "
+              f"errors={snap['errors']} timeouts={snap['timeouts']} "
+              f"corruptions={snap['corruptions']} "
+              f"flap_rejections={snap['flap_rejections']} "
+              f"retries={retry_policy.retries} "
+              f"giveups={retry_policy.giveups} "
+              f"shed={eng.shed_requests}", flush=True)
     if eng.pager is not None:
         kv = eng.pager.stats()
         cold = kv["cold"]
@@ -620,7 +777,9 @@ def main(argv=None) -> dict:
                 "shards": eng.kv_shards, "replicas": eng.kv_replicas,
                 "epoch": fs["epoch"], "failed": fs["failed"],
                 "failovers": fs["failovers"],
-                "replicated_writes": fs["replicated_writes"],
+                "integrity_failures": fs.get("integrity_failures", 0),
+                "degraded_writes": fs.get("degraded_writes", 0),
+                "replicated_writes": fs.get("replicated_writes", 0),
                 "pages_moved": fs["pages_moved"],
                 "killed": eng.killed_member,
                 "kill_step": eng.kill_step,

@@ -27,6 +27,7 @@ so a miss set of N pages costs one setup, not N.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Any, Callable, Optional, Protocol, Sequence, \
@@ -35,6 +36,7 @@ from typing import Any, Callable, Optional, Protocol, Sequence, \
 import numpy as np
 
 from repro import obs
+from repro.faults import injector as _faults
 from repro.core.analytical import (PathModel, doorbell_bandwidth_gbps,
                                    far_memory_path, tpu_host_path)
 from repro.core.channels import CompletionMode, Direction
@@ -278,13 +280,31 @@ class LocalHostBackend(_AccountingMixin):
     """Cold pages in host DRAM — the seed ``KVPager`` backing store."""
 
     name = "local-host"
+    # fault-injection scopes: one per backend instance so a plan can
+    # target one DMA engine without touching the rest (XDMA and QDMA
+    # adapters both wrap instances of this class)
+    _scope_ids = itertools.count()
 
     def __init__(self, n_pages: int, page_bytes: int):
         if n_pages < 1 or page_bytes < 1:
             raise ValueError((n_pages, page_bytes))
         self.n_pages = n_pages
         self.page_bytes = page_bytes
+        self.fault_scope = \
+            f"{self.name}#{next(LocalHostBackend._scope_ids)}"
         self.mem = np.zeros((n_pages, page_bytes), np.uint8)
+
+    def _inject(self, pages, bufs=None) -> None:
+        """DMA-engine fault hook: one draw per page op, mirroring the
+        per-WR draws on the verbs path; ``bufs`` are the just-landed
+        destination rows (corruption targets)."""
+        plan = _faults.current()
+        if plan is None:
+            return
+        for i, _ in enumerate(pages):
+            plan.before_op(self.fault_scope)
+            if bufs is not None:
+                plan.corrupt(self.fault_scope, bufs[i])
 
     def _check(self, page: int, nbytes: int) -> None:
         if page < 0 or page >= self.n_pages:
@@ -297,12 +317,16 @@ class LocalHostBackend(_AccountingMixin):
         self._check(page, flat.size)
         t0 = time.perf_counter()
         self.mem[page, :flat.size] = flat
+        if _faults.ACTIVE:
+            self._inject([page], [self.mem[page, :flat.size]])
         self._account(flat.size, time.perf_counter() - t0, is_store=True)
 
     def load(self, page: int) -> np.ndarray:
         self._check(page, 0)
         t0 = time.perf_counter()
         out = self.mem[page].copy()
+        if _faults.ACTIVE:
+            self._inject([page], [out])
         self._account(out.size, time.perf_counter() - t0, is_store=False)
         return out
 
@@ -322,6 +346,9 @@ class LocalHostBackend(_AccountingMixin):
         else:
             for p, f in zip(pages, flats):
                 self.mem[p, :f.size] = f
+        if _faults.ACTIVE:
+            self._inject(pages, [self.mem[p, :f.size]
+                                 for p, f in zip(pages, flats)])
         self._account(sum(f.size for f in flats),
                       time.perf_counter() - t0, is_store=True,
                       n_ops=len(pages))
@@ -334,6 +361,9 @@ class LocalHostBackend(_AccountingMixin):
         if not pages:
             return np.empty((0, self.page_bytes), np.uint8)
         out = self.mem[np.asarray(pages, np.int64)]   # one row gather
+        if _faults.ACTIVE:
+            self._inject(pages, out)    # fancy-index gather is a copy:
+            # a flip lands in the returned payload, not the store
         self._account(out.nbytes, time.perf_counter() - t0, is_store=False,
                       n_ops=len(pages))
         return out
@@ -421,6 +451,13 @@ class RemoteBackend(_AccountingMixin):
         self.qp.post_write(self.mr, page * self.page_bytes,
                            page * self.page_bytes, self.page_bytes)
         # doorbell rings at batch depth; flush() is the explicit fence
+        if _faults.ACTIVE:
+            # under injection an unfenced store can die node-side after
+            # this call returns — a deferred error the retry wrapper
+            # (which still holds the value) would never see, turning a
+            # transient into silent loss.  Fence here so the failure
+            # surfaces to whoever can re-store the page.
+            self.qp.flush()
         self._account(flat.size, time.perf_counter() - t0, is_store=True)
 
     def load(self, page: int) -> np.ndarray:
@@ -453,6 +490,12 @@ class RemoteBackend(_AccountingMixin):
             self.qp.post_write(self.mr, p * self.page_bytes,
                                p * self.page_bytes, self.page_bytes)
             total += flat.size
+        if _faults.ACTIVE:
+            # same deferred-loss hazard as ``store``: fence the batch so
+            # an injected write failure is raised to the caller, who can
+            # re-issue the whole batch (staging rows are rewritten on
+            # every attempt, so replay is idempotent)
+            self.qp.flush()
         self._account(total, time.perf_counter() - t0, is_store=True,
                       n_ops=len(pages))
 

@@ -18,6 +18,7 @@ range boundary is split across nodes, exactly like the exemplar's
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
@@ -27,11 +28,18 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.faults import injector as _faults
 from repro.rmem.verbs import OpCode, WorkRequest, _Doorbell
 
 
 class MemoryNode:
     """One far-memory server: byte pool + WR-executing worker thread."""
+
+    # fault-injection scope ids: names collide across backends (every
+    # single-node RemoteBackend calls its node "memnode0"), so scopes
+    # carry a process-unique suffix — a flap scheduled for one fabric
+    # member must not take down every shard at once
+    _scope_ids = itertools.count()
 
     def __init__(self, name: str, capacity_bytes: int, device=None,
                  latency_s: float = 0.0):
@@ -45,6 +53,7 @@ class MemoryNode:
         if latency_s < 0:
             raise ValueError(f"latency_s must be >= 0, got {latency_s}")
         self.name = name
+        self.fault_scope = f"{name}#{next(MemoryNode._scope_ids)}"
         self.capacity_bytes = capacity_bytes
         self.latency_s = latency_s
         self.epoch = 0                      # fabric membership epoch
@@ -111,6 +120,19 @@ class MemoryNode:
             wrs, bell = item
             if self.latency_s > 0:
                 time.sleep(self.latency_s)      # modeled link RTT
+            if _faults.ACTIVE:
+                # per-WR execution under injection: each WR gets its own
+                # fault draw, and a single injected error fails only its
+                # WR — the coalesced-run fallback would re-execute (and
+                # re-draw faults for) the whole run
+                for wr in wrs:
+                    err: Optional[Exception] = None
+                    try:
+                        self._execute_one(wr)
+                    except Exception as e:
+                        err = e
+                    bell.wr_done(wr, err)
+                continue
             # coalesce runs of same-opcode WRs: one staged device hop per
             # run (the doorbell amortization — N batched reads/writes cost
             # one device_put + one sync instead of N)
@@ -137,6 +159,13 @@ class MemoryNode:
                              f"{wr.phys_addr + wr.nbytes}) out of pool")
 
     def _execute_one(self, wr: WorkRequest) -> None:
+        if _faults.ACTIVE:
+            plan = _faults.current()
+            if plan is not None:
+                # may sleep (straggler) or raise a typed transient error
+                # (flap window / injected completion error or timeout);
+                # the error lands on exactly this WR via bell.wr_done
+                plan.before_op(self.fault_scope)
         self._check_bounds(wr)
         self.ops += 1
         self.staged_hops += 1
@@ -147,12 +176,21 @@ class MemoryNode:
             self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes] = \
                 np.asarray(staged)
             self.bytes_in += wr.nbytes
+            dst = self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes]
         else:
             staged = jax.device_put(
                 self.pool[wr.phys_addr:wr.phys_addr + wr.nbytes], self.device)
             staged.block_until_ready()
             wr.mr.view(wr.local_offset, wr.nbytes)[:] = np.asarray(staged)
             self.bytes_out += wr.nbytes
+            dst = wr.mr.view(wr.local_offset, wr.nbytes)
+        if _faults.ACTIVE:
+            plan = _faults.current()
+            if plan is not None:
+                # silent in-flight corruption: flip a bit in whatever
+                # buffer the DMA just landed in (pool on write, MR on
+                # read) — only checksums can catch this
+                plan.corrupt(self.fault_scope, dst)
 
     def _execute_run(self, run: Sequence[WorkRequest], bell: _Doorbell) \
             -> None:

@@ -45,6 +45,8 @@ import numpy as np
 from repro import obs
 from repro.core.engine import MemoryEngine
 from repro.cplane import Completion, as_completed
+from repro.faults.integrity import PageChecksums
+from repro.faults.retry import RetryPolicy, retry_io
 from repro.rmem.backend import LocalHostBackend, PendingIO, TierBackend
 
 # device-side row extraction for group-staged H2C fills: one compile per
@@ -60,6 +62,8 @@ class TieredStore:
                  dtype="bfloat16", n_hot_slots: int = 8,
                  engine: Optional[MemoryEngine] = None,
                  backend: Optional[TierBackend] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 integrity: bool = False,
                  path=None, **path_kw):
         """``path`` is the `repro.access` spelling of the cold tier: a
         path name (``"xdma"``/``"qdma"``/``"verbs"``/``"auto"``), a
@@ -98,6 +102,16 @@ class TieredStore:
         if self.backend.n_pages < n_pages or \
                 self.backend.page_bytes < self.page_bytes:
             raise ValueError("backend geometry too small for store")
+        # fault handling (§9): None/False = the hooks vanish entirely.
+        # ``retry`` wraps every cold-tier op (sync and async) in the
+        # typed transient policy; ``integrity`` stamps a checksum on
+        # every cold store and verifies on fetch — unless the backend
+        # carries its own checksum plane (ShardedPath), which verifies
+        # below us with replica fallback we cannot do here.
+        self.retry = retry
+        self.checksums: Optional[PageChecksums] = None
+        if integrity and getattr(self.backend, "checksums", None) is None:
+            self.checksums = PageChecksums()
         # device (hot) slots
         self.slots: List[Optional[jax.Array]] = [None] * self.n_hot_slots
         self.slot_of_page: Dict[int, int] = {}
@@ -120,6 +134,69 @@ class TieredStore:
         return raw[:self.page_bytes].view(self._np_dtype) \
                                     .reshape(self.page_shape)
 
+    # -- fault-wrapped cold-tier ops (§9) --------------------------------
+    def _store_cold(self, page: int, raw: np.ndarray) -> None:
+        """Cold store with checksum stamp + retry.  Full-page stores are
+        idempotent (a re-store lands the same bytes), so they retry even
+        under the default idempotent-only policy."""
+        if self.checksums is not None:
+            self.checksums.stamp(page, raw)
+        if self.retry is not None:
+            self.retry.call(lambda: self.backend.store(page, raw),
+                            op="tier.store", key=f"store:{page}",
+                            idempotent=True, source="tier")
+        else:
+            self.backend.store(page, raw)
+
+    def _load_cold(self, page: int) -> np.ndarray:
+        """Cold load with verify-on-fetch + retry: a checksum mismatch is
+        transient (the next read may be served clean — on a replica or
+        past a flaky DMA), so it rides the same retry loop."""
+        def attempt():
+            raw = self.backend.load(page)
+            if self.checksums is not None:
+                self.checksums.verify(page, raw)
+            return raw
+        if self.retry is not None:
+            return self.retry.call(attempt, op="tier.load",
+                                   key=f"load:{page}", source="tier")
+        return attempt()
+
+    def _load_many_async(self, group: Sequence[int]) -> PendingIO:
+        """Batched cold load, retry-wrapped when a policy is set.  The
+        wrapped handle is eager (re-issue must run on the waiting
+        consumer's thread, never a node thread) — with no policy the
+        backend's reactive handle passes through untouched, keeping the
+        settle-order overlap path."""
+        group = list(group)
+        return retry_io(self.retry,
+                        lambda: self.backend.load_many_async(group),
+                        op="tier.load_many",
+                        key=f"load_many:{group[0] if group else -1}",
+                        source="tier",
+                        nbytes=len(group) * self.page_bytes)
+
+    def _wait_verified(self, io: PendingIO, group_pages: Sequence[int],
+                       rows: Sequence[int]):
+        """Join a batched load; under integrity, verify each requested
+        row and recover bad ones with a sync (retry-wrapped) re-read."""
+        raw = io.wait()
+        if self.checksums is None:
+            return raw
+        bad = [(k, p) for k, p in zip(rows, group_pages)
+               if not self.checksums.check(p, raw[k])]
+        if bad:
+            if obs.metrics.live():
+                obs.default_registry().counter(
+                    "tier.integrity_failures").inc(len(bad))
+            if obs.trace.enabled():
+                obs.instant("faults.integrity",
+                            pages=[p for _, p in bad], layer="tier")
+            raw = np.array(raw, copy=True)  # gather rows may be shared
+            for k, p in bad:
+                raw[k] = self._load_cold(p)
+        return raw
+
     def read_page(self, page: int) -> np.ndarray:
         """Cold-tier view of a page (host copy, typed).  If the page is
         device-resident its slot is authoritative — drain it first."""
@@ -130,7 +207,7 @@ class TieredStore:
             host = np.asarray(self.engine.read(self.slots[s]).wait())
             self.c2h_bytes += self.page_bytes
             return host
-        return self._to_typed(self.backend.load(page))
+        return self._to_typed(self._load_cold(page))
 
     def write_page(self, page: int, value) -> None:
         """Update a page (cold tier + device copy if resident).
@@ -150,7 +227,7 @@ class TieredStore:
                 stale[0].wait()
             except Exception:
                 pass                        # discarded fetch; store decides
-        self.backend.store(page, arr.reshape(-1).view(np.uint8))
+        self._store_cold(page, arr.reshape(-1).view(np.uint8))
         self._dirty.discard(page)
         if page in self.slot_of_page:
             s = self.slot_of_page[page]
@@ -193,7 +270,7 @@ class TieredStore:
             if old in self._dirty:
                 host = np.asarray(self.engine.read(self.slots[s]).wait())
                 self.c2h_bytes += self.page_bytes
-                self.backend.store(old, host.reshape(-1).view(np.uint8))
+                self._store_cold(old, host.reshape(-1).view(np.uint8))
                 self._dirty.discard(old)
             else:
                 # clean page: the cold copy is already identical — skip the
@@ -238,7 +315,7 @@ class TieredStore:
         with obs.span("tier.prefetch", pages=len(miss), depth=depth):
             for i in range(0, len(miss), depth):
                 group = miss[i:i + depth]
-                io = self.backend.load_many_async(group)
+                io = self._load_many_async(group)
                 for k, p in enumerate(group):
                     self._prefetch[p] = (io, k)
         self.prefetch_issued += len(miss)
@@ -255,6 +332,17 @@ class TieredStore:
             return True
         ent = self._prefetch.get(page)
         return ent[0].poll() if ent is not None else False
+
+    def drop_prefetch(self, page: int) -> None:
+        """Abandon a page's in-flight prefetch (a shedding caller): join
+        it so its staging row is quiescent again, then forget it —
+        errors included, the caller has already given up on the page."""
+        ent = self._prefetch.pop(page, None)
+        if ent is not None:
+            try:
+                ent[0].wait()
+            except Exception:
+                pass
 
     def fetch_completion(self, page: int) -> Optional[Completion]:
         """The in-flight prefetch's completion handle for ``page`` (None
@@ -303,7 +391,7 @@ class TieredStore:
         depth = self._fetch_depth(len(cold))
         for i in range(0, len(cold), depth):
             g = cold[i:i + depth]
-            groups.append((g, self.backend.load_many_async(g),
+            groups.append((g, self._load_many_async(g),
                            list(range(len(g)))))
         # stage each group as ONE H2C transfer as soon as its cold bytes
         # land (later groups keep fetching meanwhile) and split rows
@@ -326,7 +414,7 @@ class TieredStore:
         installed: set = set()                  # slots with arrays landed
         try:
             for group_pages, io, rows in ordered:
-                raw = io.wait()
+                raw = self._wait_verified(io, group_pages, rows)
                 slots_g = []
                 for p in group_pages:
                     s = self._evict()
@@ -395,7 +483,7 @@ class TieredStore:
         if writeback is not False and page in self._dirty:
             host = np.asarray(self.engine.read(self.slots[s]).wait())
             self.c2h_bytes += self.page_bytes
-            self.backend.store(page, host.reshape(-1).view(np.uint8))
+            self._store_cold(page, host.reshape(-1).view(np.uint8))
         self._dirty.discard(page)
         self.page_in_slot[s] = None
         self.slots[s] = None

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.channels import CompletionMode
 from repro.cplane import Completion, CompletionTimeout, default_reactor
+from repro.faults import injector as _faults
 
 
 class OpCode(enum.Enum):
@@ -155,6 +156,13 @@ class CompletionQueue:
             return False
 
     def push(self, wc: WorkCompletion) -> None:
+        if _faults.ACTIVE:
+            plan = _faults.current()
+            if plan is not None:
+                # straggler-only: completion delivery can lag (the NIC
+                # event path stalls the characterization papers report),
+                # but never fails an already-executed WR
+                plan.delay(self.source)
         with self._lock:
             self._ring.append(wc)
             self.n_completions += 1
@@ -331,7 +339,10 @@ class QueuePair:
         self._wr_ids = itertools.count(1)
         self._state_lock = threading.Lock()
         self._bells: List[_Doorbell] = []   # rung, not yet drained
-        self._async_error: Optional[Exception] = None
+        # deferred async errors, one slot PER drained bell (insertion-
+        # ordered): each error is raised or consumed exactly once, and a
+        # second failed bell is never silently lost behind the first
+        self._async_errors: Dict[int, Exception] = {}
         self._collectors: List[List[_Doorbell]] = []
         # completion-plane source: doorbell latencies/bytes feed its EWMAs
         self._reactor = reactor if reactor is not None else default_reactor()
@@ -454,12 +465,16 @@ class QueuePair:
             try:
                 for bell in self.bells:
                     bell.wait(timeout)
-            except Exception as e:
-                # this error is reported here, to its own issuer — don't
-                # leave it deferred on the QP to poison a later fence
-                with self.qp._state_lock:
-                    if self.qp._async_error is e:
-                        self.qp._async_error = None
+            except Exception:
+                # these errors are reported here, to their own issuer —
+                # consume every collected bell's deferred slot (not just
+                # the one that raised: later bells of this batch may have
+                # failed too, and their errors belong to this issuer, not
+                # to whatever unrelated fence runs next).  Waiting the
+                # same collector again re-raises from the bells' settled
+                # completions, never from the QP — once-only is preserved
+                # under retry wrapping.
+                self.qp.consume_bell_errors(self.bells)
                 raise
 
         def completions(self) -> List[Completion]:
@@ -472,13 +487,25 @@ class QueuePair:
         return QueuePair._BellCollector(self)
 
     def raise_deferred(self) -> None:
-        """Re-raise (once) an async error from an already-drained doorbell.
-        Unsignaled WRs report failures this way — callers that skip the
-        full fence still must not lose them."""
+        """Re-raise (once) the oldest async error from an already-drained
+        doorbell.  Unsignaled WRs report failures this way — callers that
+        skip the full fence still must not lose them.  Each deferred
+        error is raised exactly once; further failed bells keep their own
+        slots for the next call."""
         with self._state_lock:
-            if self._async_error is not None:
-                e, self._async_error = self._async_error, None
-                raise e
+            if not self._async_errors:
+                return
+            key = next(iter(self._async_errors))
+            e = self._async_errors.pop(key)
+        raise e
+
+    def consume_bell_errors(self, bells: Sequence[_Doorbell]) -> None:
+        """Discard the deferred slots of ``bells`` — called by whoever
+        already observed (or owns) those bells' failures, so they are
+        not re-raised to an unrelated later fence."""
+        with self._state_lock:
+            for b in bells:
+                self._async_errors.pop(id(b), None)
 
     @property
     def outstanding_wrs(self) -> int:
@@ -492,8 +519,8 @@ class QueuePair:
 
     def _bell_drained(self, bell: _Doorbell) -> None:
         with self._state_lock:
-            if bell.error is not None and self._async_error is None:
-                self._async_error = bell.error
+            if bell.error is not None:
+                self._async_errors[id(bell)] = bell.error
             try:
                 self._bells.remove(bell)
             except ValueError:
@@ -562,10 +589,10 @@ class QueuePair:
                     if first_err is None:
                         first_err = e
         with self._state_lock:
-            if self._async_error is not None:
-                e, self._async_error = self._async_error, None
-                if first_err is None:
-                    first_err = e
+            deferred = list(self._async_errors.values())
+            self._async_errors.clear()
+        if first_err is None and deferred:
+            first_err = deferred[0]
         if first_err is not None:
             raise first_err
 

@@ -16,9 +16,21 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
+from repro.cplane import CompletionTimeout
+from repro.faults.retry import TransientIOError
+
 
 class StepFailure(RuntimeError):
     pass
+
+
+#: what a guarded step may legitimately survive: numerics blips, an
+#: explicit StepFailure, the typed transient-I/O hierarchy, and a
+#: completion timeout.  Bare ``RuntimeError`` is deliberately NOT here
+#: any more — it masked genuine bugs as retriable (§9); raise
+#: ``StepFailure`` (or a ``TransientIOError``) to opt a failure in.
+RETRIABLE_STEP_ERRORS = (FloatingPointError, StepFailure,
+                         TransientIOError, CompletionTimeout)
 
 
 @dataclass
@@ -36,7 +48,7 @@ class StepGuard:
         for attempt in range(self.max_retries + 1):
             try:
                 return True, step_fn(state, *args), None
-            except (FloatingPointError, StepFailure, RuntimeError) as e:
+            except RETRIABLE_STEP_ERRORS as e:
                 self.failures += 1
                 last = e
                 if attempt < self.max_retries:

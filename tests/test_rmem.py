@@ -476,11 +476,11 @@ class TestMissPipeline:
             be.store(0, np.full(64, 7, np.uint8))
             be.flush()
             boom = IOError("node-side write failure")
-            be.qp._async_error = boom       # a drained doorbell's error
+            be.qp._async_errors[1] = boom   # a drained doorbell's error
             with pytest.raises(IOError, match="node-side"):
                 be.load(0)
             assert be.load(0)[0] == 7       # raised once, then recovered
-            be.qp._async_error = boom
+            be.qp._async_errors[2] = boom
             with pytest.raises(IOError, match="node-side"):
                 be.load_many_async([0]).wait()
         finally:

@@ -3,6 +3,7 @@
 import pytest
 
 from repro.runtime.elastic import largest_pow2_leq, plan_resize
+from repro.faults.retry import TransientIOError
 from repro.runtime.fault import (Heartbeat, StepFailure, StepGuard,
                                  StragglerMonitor)
 
@@ -14,17 +15,45 @@ class TestStepGuard:
         def flaky(state, x):
             calls["n"] += 1
             if calls["n"] < 3:
-                raise RuntimeError("transient")
+                raise TransientIOError("transient")
             return state + x
 
         g = StepGuard(max_retries=2)
         assert g.run(flaky, 1, 2) == 3
         assert g.failures == 2
 
+    def test_bare_runtime_error_is_not_retried(self):
+        """The catch-all that masked genuine bugs as retriable is gone:
+        an untyped RuntimeError propagates on the first attempt."""
+        calls = {"n": 0}
+
+        def buggy(state):
+            calls["n"] += 1
+            raise RuntimeError("a genuine bug, not a transient")
+
+        g = StepGuard(max_retries=3)
+        with pytest.raises(RuntimeError, match="genuine bug"):
+            g.run(buggy, None)
+        assert calls["n"] == 1 and g.failures == 0
+
+    def test_completion_timeout_is_retriable(self):
+        from repro.cplane import CompletionTimeout
+        calls = {"n": 0}
+
+        def slow(state):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise CompletionTimeout("doorbell stuck")
+            return state
+
+        g = StepGuard(max_retries=1)
+        assert g.run(slow, 7) == 7
+        assert g.failures == 1
+
     def test_restore_path(self):
         def always_fail_on_bad_state(state, x):
             if state == "corrupt":
-                raise RuntimeError("bad state")
+                raise StepFailure("bad state")
             return state + x
 
         g = StepGuard(max_retries=1, on_restore=lambda: 10)
@@ -34,7 +63,8 @@ class TestStepGuard:
     def test_raises_without_restore(self):
         g = StepGuard(max_retries=1)
         with pytest.raises(StepFailure):
-            g.run(lambda s: (_ for _ in ()).throw(RuntimeError("x")), None)
+            g.run(lambda s: (_ for _ in ()).throw(TransientIOError("x")),
+                  None)
 
     def test_post_restore_replay_is_guarded(self):
         """A transient failure right after the restore must retry under
@@ -43,10 +73,10 @@ class TestStepGuard:
 
         def flaky(state, x):
             if state == "corrupt":
-                raise RuntimeError("bad state")
+                raise StepFailure("bad state")
             calls["post_restore"] += 1
             if calls["post_restore"] == 1:
-                raise RuntimeError("transient right after restore")
+                raise TransientIOError("transient right after restore")
             return state + x
 
         g = StepGuard(max_retries=1, on_restore=lambda: 10)
@@ -58,7 +88,7 @@ class TestStepGuard:
         g = StepGuard(max_retries=1, on_restore=lambda: "still-bad")
 
         def always(state, *a):
-            raise RuntimeError("x")
+            raise TransientIOError("x")
 
         with pytest.raises(StepFailure, match="post-restore replay"):
             g.run(always, None)
@@ -74,7 +104,7 @@ class TestStepGuard:
         g = StepGuard(max_retries=2)
 
         def always(state):
-            raise RuntimeError("x")
+            raise TransientIOError("x")
 
         with pytest.raises(StepFailure):
             g.run(always, None)
