@@ -14,7 +14,8 @@ import traceback
 
 from benchmarks import (chaos, common, completion_modes, contention,
                         e2e_step, fabric, far_memory, host_device_bw,
-                        offload_step, overlap, rdma_analogue, vmem_stream)
+                        offload_step, overlap, rdma_analogue, serve_slo,
+                        vmem_stream)
 from repro import obs
 
 MODULES = [
@@ -28,6 +29,7 @@ MODULES = [
     ("serve_overlap", overlap),
     ("fabric_sweep", fabric),
     ("chaos_soak", chaos),
+    ("serve_slo", serve_slo),
     ("e2e_and_roofline", e2e_step),
 ]
 
@@ -50,6 +52,10 @@ def main(argv=None) -> None:
     ap.add_argument("--chaos-json", default="",
                     help="chaos soak JSON path (chaos module); "
                          "defaults to BENCH_chaos.json with --smoke")
+    ap.add_argument("--serve-slo-json", default="",
+                    help="serving SLO bench JSON path (serve_slo "
+                         "module); defaults to BENCH_serve_slo.json "
+                         "with --smoke")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed recorded in every BENCH_*.json "
                          "(all benchmark generators are seeded; the "
@@ -76,6 +82,8 @@ def main(argv=None) -> None:
                                       if args.smoke else "")
     chaos_out = args.chaos_json or ("BENCH_chaos.json"
                                     if args.smoke else "")
+    serve_slo_out = args.serve_slo_json or ("BENCH_serve_slo.json"
+                                            if args.smoke else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -90,6 +98,8 @@ def main(argv=None) -> None:
                 mod.run(quick=quick, out=fabric_out)
             elif chaos_out and mod is chaos:
                 mod.run(quick=quick, out=chaos_out)
+            elif serve_slo_out and mod is serve_slo:
+                mod.run(quick=quick, out=serve_slo_out)
             else:
                 mod.run(quick=quick)
         except Exception:

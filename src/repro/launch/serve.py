@@ -1,562 +1,73 @@
-"""Batched serving engine: continuous slot-based batching with KV paging.
+"""Serve CLI: the thin shim over ``repro.serving`` (DESIGN.md §10).
 
-Requests enter a queue; a fixed-slot batch decodes in lockstep (one jit'd
-decode step for the whole batch).  Freed slots are refilled from the queue
-each iteration (continuous batching).  With ``--kv-paging``, each admitted
-slot's prefilled KV cache is paged through a ``TieredStore`` — packed to a
-byte page, spilled to the cold tier, fetched back H2C, and installed from
-the device-resident page — so the cache crosses the paper's memory path
-before serving.  ``--access-path`` picks the mechanism (DESIGN.md §5):
-``xdma`` (static DMA channels), ``qdma`` (descriptor queues), ``verbs``
-(far-memory nodes behind RDMA-style verbs), or ``auto`` (the
-``PathSelector`` places each page by the analytical models and records a
-decision trace).  Output is bit-exact across all of them.  The old
-``--kv-backend {local,remote}`` spelling is a deprecated alias
-(local->xdma, remote->verbs).
+The engine itself — slot-based continuous batching with KV paging,
+decode/paging overlap, sharded fabric, chaos shedding — lives in
+``repro.serving.engine`` (this module re-exports ``ServeEngine`` and
+``Request`` for compatibility).  The serving frontend split adds:
 
-Admission is *prefetch-pipelined* (DESIGN.md §3.3): right after a slot's
-cache is spilled cold, ``TieredStore.prefetch`` starts its asynchronous
-fetch — the verbs/gather leg of slot k overlaps slot k+1's prefill
-compute.  Since the completion-plane refactor (DESIGN.md §6) admission
-is also *decode-overlapped*: an admitted slot whose page is still in
-flight parks in a pending-install set instead of blocking the step, the
-batch keeps decoding resident slots, and each step installs exactly the
-slots whose fetch completion has settled (``TieredStore.fetch_ready``).
-Only when nothing is decodable does the engine block — via
-``cplane.wait_any`` over the pending fetches, waking on the *first*
-page to land rather than a fixed join order.  ``overlap=False`` restores
-the blocking-admission baseline (what ``benchmarks/overlap.py``
-measures against).  Output is bit-exact either way: a slot's tokens
-depend only on its own cache, never on when neighbours joined the
-batch.  Over-long prompts are rejected with ``Request.failed`` set; the
-engine keeps serving the rest.
+* ``--arrivals burst|poisson:R|bursty:R|diurnal:R`` — seeded open-loop
+  traffic (``repro.serving.workload``) instead of the closed-loop
+  burst; ``--tenants N`` draws per-tenant request mixes over the
+  ``configs/`` zoo.
+* ``--slo-ttft-ms`` / ``--quota-tokens`` — SLO-driven admission on a
+  virtual-time clock (``repro.serving.admission``): KV-capacity-aware
+  slot refill, priority classes, per-tenant quotas, early shedding
+  (``Request.failed="slo"``) when predicted TTFT exceeds the deadline.
+* ``--replicas N`` — a ``FleetRouter`` of N engine replicas over ONE
+  shared memory fabric (``--kv-shards``), least-outstanding-work
+  routing with tenant affinity; ``--kill-replica STEP`` kills one
+  replica mid-run and re-routes its queue (bit-exact survivors).
+* ``--deadline-s`` — wall-clock drain budget for open-loop runs
+  (alternative to the step budget).
 
-With ``--kv-shards N`` the KV memory plane is *sharded*: N member paths
-(one per shard, each a full ``--access-path`` mechanism) sit behind a
-consistent-hash ``ShardedPath`` (DESIGN.md §7), with ``--kv-replicas R``
-copies of every page and a ``FabricManager`` watching member health.
-``--kv-kill-node STEP`` fail-stops one member mid-run: reads fail over
-to replicas instantly, the manager re-replicates onto the survivor
-ring, and the served tokens stay bit-exact with the unsharded path —
-the fabric moves where bytes live, never what they are.  The old
-``--kv-nodes`` flag (verbs-backend node striping) is a deprecated alias
-of ``--kv-shards``.
+Any of those flags selects the fleet/open-loop path; without them the
+legacy single-engine closed-loop path runs unchanged: same flags, same
+output, same bit-exact guarantees (``--access-path``, ``--kv-shards``,
+``--kv-kill-node``, ``--fault-*``, ``--trace-out``, ``--metrics`` — see
+DESIGN.md §5-§9).
 
-Chaos mode (DESIGN.md §9): ``--fault-seed``/``--fault-rate``/
-``--fault-corrupt``/``--fault-flap LO:HI`` install a deterministic
-``FaultPlan`` over the whole memory plane for the run.  Faults imply
-paging (there is nothing to inject into otherwise) and switch the
-pager/fabric into fault-handling mode: a ``RetryPolicy`` wraps every
-cold-tier op and per-page checksums verify every fetch (with replica
-fallback when sharded).  A request whose paging op stays failed after
-retries and failover is *shed* — ``Request.failed`` carries the
-reason, the batch keeps decoding everyone else — never an assert.
-Survivors' tokens are bit-exact against the fault-free run
-(``benchmarks/chaos.py`` gates exactly that).
+Latency accounting (both paths): TTFT, TPOT, queue wait (submit→admit)
+and e2e latency all come from one monotonic ``perf_counter`` pair per
+request.  Shed/rejected requests are excluded from every latency
+aggregate and from goodput; they are counted under ``rejected`` with
+per-reason totals.
 
 CPU-runnable: PYTHONPATH=src python -m repro.launch.serve \
                   --arch qwen2-0.5b --smoke --requests 8 --max-new 16 \
                   [--kv-paging --access-path auto] [--no-overlap] \
                   [--kv-shards 4 --kv-replicas 2 --kv-kill-node 5] \
-                  [--fault-seed 7 --fault-rate 0.02 --fault-corrupt 0.05]
+                  [--fault-seed 7 --fault-rate 0.02 --fault-corrupt 0.05] \
+                  [--arrivals poisson:8 --tenants 3 --replicas 2 \
+                   --slo-ttft-ms 200 --deadline-s 30]
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import queue
 import time
 import warnings
-from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import cplane, obs
-from repro.access.registry import create_path
+from repro import obs
 from repro.access.selector import PathSelector
 from repro.configs import ARCHS, get_config, reduce_for_smoke
 from repro.faults import injector as _faults
 from repro.faults.injector import FaultPlan
-from repro.faults.retry import RETRIABLE, RetryPolicy
-from repro.models import lm
+from repro.faults.retry import RetryPolicy
 from repro.models import transformer as T
-from repro.rmem.store import TieredStore
+from repro.serving import (AdmissionController, FleetRouter, Request,
+                           ServeEngine, Workload, default_tenants,
+                           parse_arrivals, summarize_requests)
+from repro.serving.engine import _KV_BACKEND_ALIAS
 
-# deprecated --kv-backend spellings -> access-path names
-_KV_BACKEND_ALIAS = {"local": "xdma", "remote": "verbs"}
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                 # (prompt_len,) int32
-    max_new: int = 16
-    out_tokens: Optional[List[int]] = None
-    t_submit: float = 0.0
-    t_done: float = 0.0
-    failed: Optional[str] = None       # rejection reason (engine kept going)
-    # monotonic lifecycle clocks (perf_counter): submit -> first token
-    # is TTFT, first token -> done over the remaining tokens is TPOT
-    t_submit_pc: float = 0.0
-    t_first_pc: float = 0.0
+__all__ = ["Request", "ServeEngine", "main"]
 
 
-class ServeEngine:
-    def __init__(self, cfg, params, batch_slots: int = 4,
-                 max_len: int = 256, access_path: Optional[str] = None,
-                 kv_backend: Optional[str] = None,
-                 kv_shards: int = 1, kv_replicas: int = 1,
-                 kv_kill_step: Optional[int] = None,
-                 kv_nodes: Optional[int] = None, kv_doorbell: int = 4,
-                 overlap: bool = True, overlap_grace_s: float = 0.002,
-                 kv_node_latency_s: float = 0.0,
-                 kv_retry: Optional[RetryPolicy] = None,
-                 kv_integrity: bool = False):
-        if kv_backend is not None:
-            warnings.warn(
-                "ServeEngine(kv_backend=...) is deprecated; use "
-                "access_path='xdma'|'qdma'|'verbs'|'auto'",
-                DeprecationWarning, stacklevel=2)
-            if access_path is None:
-                access_path = _KV_BACKEND_ALIAS[kv_backend]
-        if kv_nodes is not None:
-            # the --kv-nodes era striped one verbs backend over N
-            # memory nodes; membership is now the fabric's (sharded
-            # members, each a whole path), so the flag folds into it
-            warnings.warn(
-                "ServeEngine(kv_nodes=...) is deprecated; use "
-                "kv_shards=N (fabric membership)", DeprecationWarning,
-                stacklevel=2)
-            if kv_shards == 1:
-                kv_shards = kv_nodes
-        if kv_shards < 1:
-            raise ValueError(f"kv_shards must be >= 1, got {kv_shards}")
-        if not 1 <= kv_replicas <= max(kv_shards, 1):
-            raise ValueError(f"kv_replicas={kv_replicas} must be in "
-                             f"[1, kv_shards={kv_shards}]")
-        if kv_kill_step is not None and kv_replicas < 2:
-            raise ValueError(
-                "kv_kill_step without replication would lose pages: "
-                "use kv_replicas >= 2")
-        if access_path is None and (kv_shards > 1 or
-                                    kv_kill_step is not None):
-            # sharding implies paging: a library caller asking for a
-            # fabric (or fault injection) must get one, not a silent
-            # unsharded run — same default the CLI applies
-            access_path = "xdma"
-        self.cfg = cfg
-        self.params = params
-        self.B = batch_slots
-        self.max_len = max_len
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.done: List[Request] = []
-        self.prefill_1 = jax.jit(lm.make_prefill_step(cfg))
-        self.decode = jax.jit(lm.make_decode_step(cfg))
-        self.caches = T.init_cache(cfg, batch_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * batch_slots
-        self.slot_left = np.zeros(batch_slots, np.int64)
-        self.slot_pos = np.zeros(batch_slots, np.int64)
-        self.cur_tokens = np.zeros((batch_slots, 1), np.int32)
-        # KV paging: one page per slot holding the packed prefill cache
-        self.pager: Optional[TieredStore] = None
-        self.access_path = access_path
-        self.overlap = overlap
-        # grace: before decoding with installs pending, give their
-        # fetches this long to settle — a fetch faster than the grace
-        # installs THIS step (degrading gracefully to the serial join),
-        # a slower one overlaps with the decode instead of blocking it
-        self.overlap_grace_s = overlap_grace_s
-        # admitted-but-nonresident slots: prefilled, spilled, fetch in
-        # flight — decode keeps running; each entry installs the step its
-        # page lands (slot -> (req, first_tok, leaves, treedef))
-        self._pending_install: Dict[int, Tuple] = {}
-        self.overlap_installs = 0       # installs that joined a settled
-        self.blocking_installs = 0      # ... vs had to block/join inline
-        self.kv_shards = kv_shards
-        self.kv_replicas = kv_replicas
-        self.kv_kill_step = kv_kill_step
-        # fault handling (§9): the retry policy + checksum plane live in
-        # whichever layer owns replica routing — the fabric when sharded
-        # (replica fallback needs the ring), the tier store otherwise
-        self.kv_retry = kv_retry
-        self.kv_integrity = kv_integrity
-        self.shed_requests = 0
-        self.fabric = None                  # ShardedPath when sharded
-        self.fabric_mgr = None
-        self.killed_member: Optional[str] = None
-        self.kill_step: Optional[int] = None
-        self._step_no = 0
-        # per-request latency distributions (always on: one record per
-        # request lifecycle event, nowhere near the hot decode loop).
-        # TTFT = submit -> first token (prefill + paging + queueing);
-        # TPOT = (done - first) / (tokens - 1), the decode cadence.
-        self.ttft_hist = obs.LogHistogram()
-        self.tpot_hist = obs.LogHistogram()
-        # fabric membership events drained per step and stamped with the
-        # decode step they landed in (when the kill hit, relative to
-        # decode progress — satellite of DESIGN.md §8)
-        self.fabric_events: List[dict] = []
-        if access_path is not None:
-            self._cache_template = T.init_cache(cfg, 1, max_len)
-            page_bytes = sum(l.nbytes
-                             for l in jax.tree.leaves(self._cache_template))
-            if kv_shards > 1:
-                # the sharded memory plane: N member paths (each a full
-                # access path) behind one consistent-hash ShardedPath —
-                # TieredStore stays shard-oblivious, both hops ride it
-                from repro.fabric import FabricManager
-                apath = create_path(
-                    "fabric", member=access_path, shards=kv_shards,
-                    replicas=kv_replicas, n_pages=batch_slots,
-                    page_bytes=page_bytes, n_channels=2, n_nodes=1,
-                    doorbell_batch=kv_doorbell,
-                    node_latency_s=kv_node_latency_s,
-                    retry=kv_retry, integrity=kv_integrity)
-                self.fabric = apath
-                self.fabric_mgr = FabricManager(apath)
-            else:
-                # registry factories drop kwargs their path doesn't take
-                apath = create_path(access_path, n_pages=batch_slots,
-                                    page_bytes=page_bytes, n_channels=2,
-                                    n_nodes=1,
-                                    doorbell_batch=kv_doorbell,
-                                    node_latency_s=kv_node_latency_s)
-            # one retry layer, not two: with the fabric retrying (and
-            # failing over) internally, a tier-level policy on top would
-            # multiply attempts for ops the fabric already gave up on
-            self.pager = TieredStore(
-                n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
-                n_hot_slots=batch_slots, path=apath,
-                retry=kv_retry if self.fabric is None else None,
-                integrity=kv_integrity)
-
-    def submit(self, req: Request) -> None:
-        req.t_submit = time.time()
-        req.t_submit_pc = time.perf_counter()
-        req.out_tokens = []
-        obs.async_begin("serve.request", req.rid,
-                        prompt_len=len(req.prompt), max_new=req.max_new)
-        self.queue.put(req)
-
-    def _slot_cache_set(self, slot: int, new_caches) -> None:
-        """Write one slot's prefilled (B=1) cache into the batch cache tree.
-
-        The batch axis is located structurally: it is the axis where the
-        batch leaf has size ``B`` and the single-request leaf has size 1
-        (stacked group caches are (G, B, ...), tail caches (B, ...), and
-        per-layer "len" scalars have no batch axis at all).
-        """
-        flat_b, treedef = jax.tree.flatten(self.caches)
-        flat_o = jax.tree.leaves(new_caches)
-        out = []
-        for b, o in zip(flat_b, flat_o):
-            ax = next((i for i, (x, y) in enumerate(zip(b.shape, o.shape))
-                       if x == self.B and y == 1), None)
-            if ax is None:             # "len" counters: no batch axis
-                out.append(jnp.maximum(b, o))
-                continue
-            idx = [slice(None)] * b.ndim
-            idx[ax] = slot
-            src_idx = [slice(None)] * o.ndim
-            src_idx[ax] = 0
-            out.append(b.at[tuple(idx)].set(o[tuple(src_idx)]))
-        self.caches = jax.tree.unflatten(treedef, out)
-
-    def _page_store(self, slot: int, leaves) -> None:
-        """Pack a slot's prefilled cache to one byte page, spill it to the
-        cold tier, and *prefetch* it — the async fetch (one-sided verbs or
-        host gather) runs while admission moves on to other slots."""
-        packed = np.concatenate(
-            [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
-        self.pager.write_page(slot, packed)
-        self.pager.prefetch([slot])
-
-    def _page_fetch(self, slot: int, leaves, treedef):
-        """Join the slot's in-flight prefetch (``ensure`` finds the bytes
-        already staged) and unpack the device-resident page into cache
-        leaves.  Bit-exact by construction, so serving output is invariant
-        to the backend."""
-        dev_page = self.pager.ensure([slot])[slot]
-        out, off = [], 0
-        for l in leaves:
-            piece = jax.lax.slice(dev_page, (off,), (off + l.nbytes,))
-            out.append(piece.view(l.dtype).reshape(l.shape))
-            off += l.nbytes
-        return jax.tree.unflatten(treedef, out)
-
-    def _admit(self) -> None:
-        """Fill free slots from the queue (continuous batching).
-
-        When paging, each admitted request prefills, spills its packed
-        cache cold, and starts the page's *prefetch*; the slot then goes
-        to the pending-install set — ``_install_ready`` moves it into the
-        decode batch once (``overlap=True``) or regardless of whether
-        (``overlap=False``) its fetch has settled.  Slot k's cold fetch
-        is in flight while slot k+1 is still prefilling AND while the
-        resident batch keeps decoding, so paging latency hides behind
-        both admission work and the decode cadence.
-
-        Over-long prompts are rejected (marked failed with a reason) and
-        the engine keeps serving.
-        """
-        admitted = []            # (slot, req, first_tok, leaves/caches, def)
-        for s in range(self.B):
-            if self.slot_req[s] is not None or s in self._pending_install:
-                continue
-            req = None
-            while req is None:
-                try:
-                    cand = self.queue.get_nowait()
-                except queue.Empty:
-                    break
-                P = len(cand.prompt)
-                if P >= self.max_len:
-                    cand.failed = (f"prompt length {P} >= engine max_len "
-                                   f"{self.max_len}")
-                    cand.t_done = time.time()
-                    self.done.append(cand)
-                    obs.async_end("serve.request", cand.rid,
-                                  rejected=True)
-                    continue
-                req = cand
-            if req is None:
-                break
-            P = len(req.prompt)
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-            if self.cfg.attention is not None and \
-                    self.cfg.attention.mrope_sections is not None:
-                batch["pos"] = jnp.broadcast_to(
-                    jnp.arange(P, dtype=jnp.int32)[None, :, None], (1, P, 3))
-            with obs.span("serve.prefill", rid=req.rid, slot=s,
-                          prompt_len=P):
-                caches1 = T.init_cache(self.cfg, 1, self.max_len)
-                caches1, logits = self.prefill_1(self.params, batch,
-                                                 caches1)
-                tok = int(jnp.argmax(logits[0]))
-                if self.pager is not None:
-                    leaves, treedef = jax.tree.flatten(caches1)
-                    try:
-                        self._page_store(s, leaves)
-                    except RETRIABLE as e:
-                        self._shed(req, f"kv page store failed: {e}",
-                                   slot=s)
-                        continue
-                    self._pending_install[s] = (req, tok, leaves, treedef)
-                else:
-                    admitted.append((s, req, tok, caches1, None))
-        for s, req, tok, caches1, _ in admitted:    # non-paged: inline
-            self._install(s, req, tok, caches1)
-
-    def _install(self, s: int, req: Request, tok: int, caches1) -> None:
-        self._slot_cache_set(s, caches1)
-        self.slot_req[s] = req
-        self.slot_left[s] = req.max_new - 1
-        self.slot_pos[s] = len(req.prompt)
-        self.cur_tokens[s, 0] = tok
-        req.out_tokens.append(tok)
-        # first token lands here: TTFT covers queueing + prefill + the
-        # whole paging round trip (spill, cold fetch, H2C, install)
-        req.t_first_pc = time.perf_counter()
-        ttft = req.t_first_pc - req.t_submit_pc
-        self.ttft_hist.record(ttft)
-        if obs.metrics.live():
-            obs.default_registry().histogram("serve.ttft_s").record(ttft)
-        if obs.trace.enabled():
-            obs.instant("serve.first_token", rid=req.rid, slot=s,
-                        ttft_s=ttft)
-
-    def _shed(self, req: Request, reason: str,
-              slot: Optional[int] = None) -> None:
-        """Degrade instead of crash (§9): a paging op that stayed failed
-        after retries and replica failover sheds THIS request —
-        ``Request.failed`` carries the reason — and the batch keeps
-        decoding everyone else.  Survivors stay bit-exact: a slot's
-        tokens depend only on its own cache."""
-        req.failed = reason
-        req.t_done = time.time()
-        self.done.append(req)
-        self.shed_requests += 1
-        if slot is not None and self.pager is not None:
-            self._pending_install.pop(slot, None)
-            self.pager.drop_prefetch(slot)
-            try:
-                self.pager.release(slot, writeback=False)
-            except Exception:
-                pass        # the page is being abandoned either way
-        if obs.trace.enabled():
-            obs.instant("serve.shed", rid=req.rid, reason=reason)
-        if obs.metrics.live():
-            obs.default_registry().counter("serve.shed_requests").inc()
-        obs.async_end("serve.request", req.rid, shed=True)
-
-    def _install_ready(self, have_active: bool) -> None:
-        """Move pending-install slots whose page fetch has settled into
-        the decode batch.
-
-        ``overlap=True``: only settled fetches install; with nothing else
-        to decode the engine blocks on ``cplane.wait_any`` across ALL
-        pending fetches — waking on the first page to land, whichever
-        path or backend it came from — and installs at least one slot so
-        the loop always progresses.  ``overlap=False`` (the serial
-        baseline): every pending slot installs now, joining its fetch
-        inline exactly like the pre-cplane two-phase admission.
-        """
-        if not self._pending_install:
-            return
-        if not self.overlap:
-            ready = sorted(self._pending_install)
-            self.blocking_installs += len(ready)
-        else:
-            pending = sorted(self._pending_install)
-            ready = [s for s in pending if self.pager.fetch_ready(s)]
-            if not ready:
-                # nothing landed yet: with other slots decodable, grant a
-                # short grace (a fast fetch installs this step, a slow
-                # one overlaps the decode); with nothing decodable, block
-                # until the FIRST page lands, whichever it is.  Only
-                # reactive handles can settle on their own — a legacy
-                # eager PendingIO never will, so waiting on one would
-                # just burn the full timeout before the inline join
-                cs = [c for s in pending
-                      if (c := self.pager.fetch_completion(s)) is not None
-                      and getattr(c, "reactive", True)]
-                if cs:
-                    try:
-                        cplane.wait_any(
-                            cs, timeout=self.overlap_grace_s
-                            if have_active else 60.0)
-                    except cplane.CompletionTimeout:
-                        pass
-                ready = [s for s in pending if self.pager.fetch_ready(s)]
-            if ready:
-                self.overlap_installs += len(ready)
-            elif not have_active:
-                # non-reactive backend (or nothing within 60s): join one
-                # fetch inline so the loop always progresses
-                ready = [pending[0]]
-                self.blocking_installs += 1
-        for s in ready:
-            req, tok, leaves, treedef = self._pending_install.pop(s)
-            with obs.span("serve.install", rid=req.rid, slot=s):
-                try:
-                    caches1 = self._page_fetch(s, leaves, treedef)
-                except RETRIABLE as e:
-                    self._shed(req, f"kv page fetch failed: {e}", slot=s)
-                    continue
-                self._install(s, req, tok, caches1)
-
-    def _maybe_kill_node(self) -> None:
-        """Fail one fabric member at the configured step (fault
-        injection): reads fail over to replicas immediately and the
-        manager re-replicates onto the survivor ring — decode output
-        must stay bit-exact through it."""
-        if self.fabric_mgr is None or self.kv_kill_step is None or \
-                self.killed_member is not None or \
-                self._step_no < self.kv_kill_step:
-            return
-        victim = self.fabric.alive_members()[-1]
-        if obs.trace.enabled():
-            obs.instant("serve.kill", member=victim, step=self._step_no)
-        repair = self.fabric_mgr.kill(victim)
-        self.killed_member = victim
-        self.kill_step = self._step_no
-        self.kill_repair = repair
-
-    def _finish(self, req: Request) -> None:
-        req.t_done = time.time()
-        self.done.append(req)
-        n = len(req.out_tokens)
-        if req.t_first_pc > 0.0 and n > 1:
-            tpot = (time.perf_counter() - req.t_first_pc) / (n - 1)
-            self.tpot_hist.record(tpot)
-            if obs.metrics.live():
-                obs.default_registry().histogram(
-                    "serve.tpot_s").record(tpot)
-        obs.async_end("serve.request", req.rid, tokens=n)
-
-    def _drain_fabric_events(self) -> None:
-        """Stamp the fabric's membership events (fail / epoch / ring
-        flip / repair) with the decode step they landed in — the serve
-        result's answer to "when did the kill hit, relative to decode
-        progress"."""
-        if self.fabric is None:
-            return
-        for ev in self.fabric.drain_events():
-            ev["step"] = self._step_no
-            self.fabric_events.append(ev)
-
-    def step(self) -> int:
-        """One batched decode step; returns #active slots."""
-        self._step_no += 1
-        self._maybe_kill_node()
-        self._admit()
-        if self.pager is not None:
-            have_active = any(r is not None for r in self.slot_req)
-            self._install_ready(have_active)
-        self._drain_fabric_events()
-        active = [s for s in range(self.B) if self.slot_req[s] is not None]
-        if not active:
-            return 0
-        with obs.span("serve.decode_step", step=self._step_no,
-                      active=len(active)):
-            pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
-            batch = {"tokens": jnp.asarray(self.cur_tokens)}
-            if self.cfg.attention is not None and \
-                    self.cfg.attention.mrope_sections is not None:
-                batch["pos"] = jnp.broadcast_to(pos[..., None],
-                                                (self.B, 1, 3))
-            else:
-                batch["pos"] = pos
-            self.caches, logits = self.decode(self.params, batch,
-                                              self.caches)
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        for s in active:
-            tok = int(nxt[s])
-            req = self.slot_req[s]
-            req.out_tokens.append(tok)
-            self.slot_pos[s] += 1
-            self.slot_left[s] -= 1
-            if self.slot_left[s] <= 0:
-                self._finish(req)
-                self.slot_req[s] = None
-                if self.pager is not None:
-                    self.pager.release(s)
-            else:
-                self.cur_tokens[s, 0] = tok
-        return len(active)
-
-    def run_until_drained(self, max_steps: int = 10000) -> int:
-        """Step until every request finishes, or ``max_steps`` runs out.
-
-        Returns the number of undrained requests (0 on a clean drain:
-        queue empty, no active slots, no pending installs).  A nonzero
-        return — the engine hit the step budget with work left — also
-        warns, instead of the old silent truncation.
-        """
-        for _ in range(max_steps):
-            if self.step() == 0 and self.queue.empty() and \
-                    not self._pending_install:
-                return 0
-        left = (self.queue.qsize()
-                + sum(r is not None for r in self.slot_req)
-                + len(self._pending_install))
-        if left:
-            warnings.warn(
-                f"run_until_drained: {left} requests still undrained "
-                f"after max_steps={max_steps}", RuntimeWarning,
-                stacklevel=2)
-        return left
-
-
-def _fault_scopes(path) -> List[str]:
-    """Every injectable fault scope reachable under ``path``, in member
-    order: fabric members and auto-selector candidates are walked
-    recursively; the leaves are the host backend (``local-host#K``) or
-    the verbs memory nodes (``memnode0#K``).  Resolved AFTER engine
-    construction — scope ids are allocation-ordered, so a flap window
-    must name the scope a *this* engine's path actually got."""
+def _fault_scopes(path) -> list:
+    """Scope ids a FaultPlan flap can name, in path order.  Walks the
+    path tree: ShardedPath members, PathSelector legs, then each leaf's
+    backend (LocalHostBackend) or far-memory nodes (RemoteBackend)."""
     members = getattr(path, "_members", None)
     if members is not None:                   # ShardedPath
         return [s for m in members.values() for s in _fault_scopes(m)]
@@ -574,6 +85,27 @@ def _fault_scopes(path) -> List[str]:
         return list(dict.fromkeys(
             e.node.fault_scope for e in amap.entries))
     return []
+
+
+def _latency_summary(hists: dict, e2e_s) -> dict:
+    e2e = obs.LogHistogram()
+    for x in e2e_s:
+        e2e.record(x)
+    out = {name: h.summary() for name, h in hists.items()}
+    out["e2e_s"] = e2e.summary()
+    return out
+
+
+def _kv_stats_print(pager, access_path) -> dict:
+    kv = pager.stats()
+    cold = kv["cold"]
+    print(f"[serve:kv-paging] path={access_path} "
+          f"tier={cold['tier']} "
+          f"stored={cold['bytes_stored']} loaded={cold['bytes_loaded']} "
+          f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
+          f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
+          flush=True)
+    return kv
 
 
 def main(argv=None) -> dict:
@@ -646,6 +178,39 @@ def main(argv=None) -> dict:
     ap.add_argument("--metrics", action="store_true",
                     help="enable live metrics and embed a registry "
                          "snapshot in the result dict")
+    # serving frontend (DESIGN.md §10): any of these flags selects the
+    # fleet/open-loop path
+    ap.add_argument("--arrivals", default=None, metavar="SPEC",
+                    help="open-loop arrival process: burst | poisson:R "
+                         "| bursty:R[:BURST[:CALM]] | "
+                         "diurnal:R[:PERIOD[:DEPTH]] (R = requests/s "
+                         "of fleet virtual time)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="number of tenants; mixes are drawn per tenant "
+                         "over the configs/ zoo's traffic shapes, "
+                         "tenant 0 highest priority")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve-engine replicas sharing one memory "
+                         "fabric, behind a least-outstanding-work "
+                         "router with tenant affinity")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT deadline: admission sheds a request "
+                         "early (failed='slo') when predicted TTFT "
+                         "from queue depth x measured decode cadence "
+                         "exceeds this")
+    ap.add_argument("--quota-tokens", type=int, default=None,
+                    help="per-tenant in-flight token quota (prompt + "
+                         "decode budget of admitted, unfinished "
+                         "requests)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="wall-clock drain budget (alternative to the "
+                         "step budget; open-loop runs bound time, not "
+                         "steps)")
+    ap.add_argument("--kill-replica", type=int, default=None,
+                    metavar="ROUND",
+                    help="kill the last replica at this fleet round and "
+                         "re-route its queue to the survivors "
+                         "(requires --replicas >= 2)")
     args = ap.parse_args(argv)
 
     if args.trace_out:
@@ -683,6 +248,17 @@ def main(argv=None) -> dict:
         cfg = reduce_for_smoke(cfg)
     params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(args.seed))
     retry_policy = RetryPolicy(seed=fault_seed) if faults_on else None
+
+    fleet_mode = (args.replicas > 1 or args.arrivals is not None or
+                  args.slo_ttft_ms is not None or args.tenants > 1 or
+                  args.quota_tokens is not None or
+                  args.deadline_s is not None or
+                  args.kill_replica is not None)
+    if fleet_mode:
+        return _main_fleet(args, cfg, params, access if paging else None,
+                           kv_shards, faults_on, fault_seed,
+                           retry_policy)
+
     eng = ServeEngine(cfg, params, batch_slots=args.slots,
                       max_len=args.max_len,
                       access_path=access if paging else None,
@@ -722,22 +298,25 @@ def main(argv=None) -> dict:
             # must not draw from the (now fully consumed) fault schedule
             _faults.uninstall()
     dt = time.time() - t0
-    served = [r for r in eng.done if r.failed is None]
+    summ = summarize_requests(eng.done)
+    served, toks = summ["served"], summ["tokens"]
     failed = [r for r in eng.done if r.failed is not None]
-    toks = sum(len(r.out_tokens) for r in served)
-    lat = [r.t_done - r.t_submit for r in served] or [0.0]
-    print(f"[serve] {len(served)} requests ({len(failed)} rejected), "
+    lat = summ["e2e_s"]
+    print(f"[serve] {len(served)} requests "
+          f"({summ['rejected']['count']} rejected), "
           f"{toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s), "
           f"p50 latency {np.median(lat):.2f}s", flush=True)
-    lat_sum = {"ttft_s": eng.ttft_hist.summary(),
-               "tpot_s": eng.tpot_hist.summary()}
+    lat_sum = _latency_summary(
+        {"ttft_s": eng.ttft_hist, "tpot_s": eng.tpot_hist,
+         "queue_wait_s": eng.queue_wait_hist}, lat)
     print(f"[serve:latency] ttft p50={lat_sum['ttft_s']['p50']*1e3:.1f}ms "
           f"p95={lat_sum['ttft_s']['p95']*1e3:.1f}ms "
           f"p99={lat_sum['ttft_s']['p99']*1e3:.1f}ms | "
           f"tpot p50={lat_sum['tpot_s']['p50']*1e3:.2f}ms "
           f"p99={lat_sum['tpot_s']['p99']*1e3:.2f}ms", flush=True)
     result = {"requests": len(served), "tokens": toks, "seconds": dt,
-              "tok_per_s": toks / dt, "rejected": len(failed),
+              "tok_per_s": toks / dt,
+              "rejected": summ["rejected"],
               "shed": eng.shed_requests,
               "access_path": eng.access_path, "undrained": undrained,
               "overlap": eng.overlap,
@@ -762,14 +341,7 @@ def main(argv=None) -> dict:
               f"giveups={retry_policy.giveups} "
               f"shed={eng.shed_requests}", flush=True)
     if eng.pager is not None:
-        kv = eng.pager.stats()
-        cold = kv["cold"]
-        print(f"[serve:kv-paging] path={eng.access_path} "
-              f"tier={cold['tier']} "
-              f"stored={cold['bytes_stored']} loaded={cold['bytes_loaded']} "
-              f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
-              f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
-              flush=True)
+        kv = _kv_stats_print(eng.pager, eng.access_path)
         if eng.fabric is not None:
             eng._drain_fabric_events()      # anything after the last step
             fs = eng.fabric.stats()
@@ -792,7 +364,7 @@ def main(argv=None) -> dict:
         sel = eng.pager.path
         if isinstance(sel, PathSelector):
             trace = sel.decisions
-            placed = cold.get("placement", {})
+            placed = kv["cold"].get("placement", {})
             print(f"[serve:access-auto] {len(trace)} decisions, "
                   f"placement={placed}", flush=True)
             result["path_decisions"] = [
@@ -801,6 +373,118 @@ def main(argv=None) -> dict:
                  "model_argmin": d.model_argmin} for d in trace]
         result["kv"] = kv
         eng.pager.close()
+    if args.metrics:
+        result["metrics"] = obs.default_registry().snapshot()
+    if args.trace_out:
+        n_ev = obs.trace.export(args.trace_out)
+        print(f"[serve:trace] wrote {n_ev} events to {args.trace_out}",
+              flush=True)
+    return result
+
+
+def _main_fleet(args, cfg, params, access, kv_shards, faults_on,
+                fault_seed, retry_policy) -> dict:
+    """The serving-frontend path: workload -> admission -> fleet."""
+    slo_s = args.slo_ttft_ms / 1e3 if args.slo_ttft_ms is not None \
+        else None
+
+    def mk_admission():
+        return AdmissionController(slo_ttft_s=slo_s,
+                                   default_quota=args.quota_tokens)
+
+    kill_at = None
+    if args.kill_replica is not None:
+        kill_at = (args.kill_replica, f"replica{args.replicas - 1}")
+    router = FleetRouter.build(
+        cfg, params, replicas=args.replicas, batch_slots=args.slots,
+        max_len=args.max_len, access_path=access, kv_shards=kv_shards,
+        kv_replicas=args.kv_replicas, kv_kill_step=args.kv_kill_node,
+        kv_doorbell=args.kv_doorbell, overlap=not args.no_overlap,
+        kv_node_latency_s=args.kv_node_latency, kv_retry=retry_policy,
+        kv_integrity=faults_on, admission_factory=mk_admission,
+        kill_replica_at=kill_at)
+    plan = None
+    if faults_on:
+        plan = _faults.install(FaultPlan(
+            fault_seed, error_rate=args.fault_rate,
+            timeout_rate=args.fault_timeout_rate,
+            corrupt_rate=args.fault_corrupt))
+    arrivals = parse_arrivals(args.arrivals or "burst")
+    tenants = default_tenants(args.tenants, args.max_len,
+                              quota_tokens=args.quota_tokens,
+                              slo_ttft_s=slo_s)
+    workload = Workload(arrivals, tenants, args.max_len, seed=args.seed)
+    pairs = workload.requests(workload.schedule(args.requests),
+                              cfg.vocab)
+    t0 = time.time()
+    try:
+        undrained = router.run_open_loop(pairs,
+                                         deadline_s=args.deadline_s)
+    finally:
+        if faults_on:
+            _faults.uninstall()
+    dt = time.time() - t0
+    fleet = router.stats()
+    done = router.done_requests()
+    summ = summarize_requests(done)
+    served, toks = summ["served"], summ["tokens"]
+    lat = summ["e2e_s"]
+    lat_sum = _latency_summary(
+        {"ttft_s": router.merged_hist("ttft_hist"),
+         "tpot_s": router.merged_hist("tpot_hist"),
+         "queue_wait_s": router.merged_hist("queue_wait_hist")}, lat)
+    adm = {n: router.engines[n].admission.stats()
+           for n in router.engines
+           if router.engines[n].admission is not None}
+    print(f"[serve:fleet] {fleet['replicas']} replicas "
+          f"({len(fleet['live'])} live), {arrivals.describe()} x "
+          f"{len(tenants)} tenants: {len(served)} served "
+          f"({summ['rejected']['count']} rejected: "
+          f"{summ['rejected']['reasons']}), {toks} tokens, "
+          f"{fleet['rounds']} rounds, "
+          f"{fleet['virtual_seconds']:.2f} virtual s "
+          f"({fleet['goodput_tok_per_vs']:.1f} tok/vs, "
+          f"wall {dt:.2f}s), rerouted={fleet['rerouted']}", flush=True)
+    print(f"[serve:latency] ttft p50={lat_sum['ttft_s']['p50']*1e3:.1f}ms "
+          f"p99={lat_sum['ttft_s']['p99']*1e3:.1f}ms | "
+          f"queue_wait p50={lat_sum['queue_wait_s']['p50']*1e3:.1f}ms "
+          f"p99={lat_sum['queue_wait_s']['p99']*1e3:.1f}ms | "
+          f"e2e p50={lat_sum['e2e_s']['p50']*1e3:.1f}ms", flush=True)
+    result = {"requests": len(served), "tokens": toks, "seconds": dt,
+              "tok_per_s": toks / dt if dt > 0 else 0.0,
+              "goodput_tok_per_vs": fleet["goodput_tok_per_vs"],
+              "rejected": summ["rejected"],
+              "shed": sum(e.shed_requests
+                          for e in router.engines.values()),
+              "access_path": access, "undrained": undrained,
+              "latency": lat_sum,
+              "outputs": {r.rid: list(r.out_tokens) for r in served},
+              "fleet": fleet, "admission": adm,
+              "workload": {"arrivals": arrivals.describe(),
+                           "tenants": [t.name for t in tenants],
+                           "seed": args.seed,
+                           "n_requests": len(pairs)}}
+    if plan is not None:
+        result["faults"] = {"seed": fault_seed, "plan": plan.snapshot(),
+                            "retry": retry_policy.stats()}
+    if router.fabric is not None:
+        fs = router.fabric.stats()
+        result["fabric"] = {
+            "shards": kv_shards, "replicas": args.kv_replicas,
+            "epoch": fs["epoch"], "failed": fs["failed"],
+            "failovers": fs["failovers"],
+            "killed": router.killed_member,
+            "kill_round": router.kill_round,
+            "events": list(router.fabric_events),
+            "repair": getattr(router, "kill_repair", None)}
+        print(f"[serve:fabric] shards={kv_shards} "
+              f"replicas={args.kv_replicas} epoch={fs['epoch']} "
+              f"killed={router.killed_member} "
+              f"failovers={fs['failovers']}", flush=True)
+    pager0 = router.engines[fleet["live"][0]].pager
+    if pager0 is not None:
+        result["kv"] = _kv_stats_print(pager0, access)
+    router.close()
     if args.metrics:
         result["metrics"] = obs.default_registry().snapshot()
     if args.trace_out:

@@ -1,0 +1,41 @@
+"""repro.serving: the production serve frontend (DESIGN.md §10).
+
+The engine/frontend/fleet split of the old monolithic
+``launch/serve.py`` drain loop:
+
+* ``engine``    — ``ServeEngine``/``Request``: slot-based continuous
+  batching with KV paging, decode/paging overlap, and fault shedding
+  (everything the old module had), plus the hooks the new layers need:
+  per-step admission delegation, page-range partitioning over a shared
+  fabric, monotonic latency clocks, and a wall-clock drain deadline.
+* ``workload``  — seeded open-loop traffic: Poisson / bursty
+  (Markov-modulated) / diurnal arrival processes and per-tenant request
+  mixes drawn over the ``configs/`` zoo's prompt/decode shapes.
+* ``admission`` — continuous batching on a virtual-time clock:
+  KV-capacity-aware slot refill, per-tenant token quotas, priority
+  classes, and SLO-driven shedding (``Request.failed = "slo"``).
+* ``fleet``     — ``FleetRouter``: N ``ServeEngine`` replicas over one
+  shared memory fabric, least-outstanding-work routing with tenant
+  affinity, and queue re-routing when a replica dies.
+
+``launch/serve.py`` remains the CLI shim over all of it.
+"""
+from repro.serving.admission import AdmissionController
+from repro.serving.engine import (Request, ServeEngine, failure_kind,
+                                  summarize_requests)
+from repro.serving.fleet import FleetRouter
+from repro.serving.workload import (ArrivalEvent, ArrivalProcess,
+                                    BurstArrivals, BurstyArrivals,
+                                    DiurnalArrivals, PoissonArrivals,
+                                    RequestMix, TenantSpec, Workload,
+                                    default_tenants, mix_for_arch,
+                                    parse_arrivals)
+
+__all__ = [
+    "ServeEngine", "Request", "failure_kind", "summarize_requests",
+    "AdmissionController", "FleetRouter",
+    "ArrivalProcess", "BurstArrivals", "PoissonArrivals",
+    "BurstyArrivals", "DiurnalArrivals", "parse_arrivals",
+    "RequestMix", "TenantSpec", "Workload", "ArrivalEvent",
+    "default_tenants", "mix_for_arch",
+]

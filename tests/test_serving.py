@@ -1,0 +1,266 @@
+"""Serving frontend tests: workload determinism, admission policy,
+fleet routing and kill re-routing (DESIGN.md §10)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import transformer as T
+from repro.serving import (AdmissionController, BurstyArrivals,
+                           DiurnalArrivals, FleetRouter, PoissonArrivals,
+                           Request, ServeEngine, Workload,
+                           default_tenants, parse_arrivals)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_for_smoke(get_config("qwen2-0.5b"))
+    params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _req(rid, prompt_len=6, max_new=6, tenant="default", priority=0,
+         deadline_s=None, vocab=256, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(0, vocab, prompt_len,
+                                       dtype=np.int32),
+                   max_new=max_new, tenant=tenant, priority=priority,
+                   deadline_s=deadline_s)
+
+
+# ---------------------------------------------------------------------------
+# workload: seeded determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", ["poisson:8", "bursty:8:5:0.2",
+                                  "diurnal:8:4:0.5", "burst"])
+def test_arrival_schedule_deterministic(spec):
+    """Same seed -> identical schedule (times, tenants, shapes);
+    different seed -> different schedule."""
+    tenants = default_tenants(3, 64)
+
+    def sched(seed):
+        wl = Workload(parse_arrivals(spec), tenants, max_len=64,
+                      seed=seed)
+        return wl.schedule(16)
+
+    a, b = sched(7), sched(7)
+    assert a == b
+    if spec != "burst":             # burst is seed-free by construction
+        assert sched(8) != a
+
+
+def test_arrival_times_monotone_and_rate_sane():
+    rng = np.random.default_rng(0)
+    for proc, rate in ((PoissonArrivals(20.0), 20.0),
+                       (BurstyArrivals(20.0), 20.0),
+                       (DiurnalArrivals(20.0), 20.0)):
+        ts = proc.times(400, np.random.default_rng(rng.integers(1 << 30)))
+        assert (np.diff(ts) >= 0).all()
+        mean_rate = len(ts) / ts[-1]
+        # long-run mean rate within a factor of 2 of nominal (bursty
+        # and diurnal modulate around it)
+        assert 0.5 * rate < mean_rate < 2.0 * rate, (proc.name,
+                                                     mean_rate)
+
+
+def test_parse_arrivals_rejects_bad_specs():
+    for bad in ["poisson", "poisson:0", "poisson:-3", "nope:5",
+                "bursty:8:0.5", "diurnal:8:4:1.5", "burst:3",
+                "poisson:abc"]:
+        with pytest.raises(ValueError):
+            parse_arrivals(bad)
+
+
+def test_request_mix_respects_window():
+    tenants = default_tenants(5, 48)
+    wl = Workload(PoissonArrivals(10.0), tenants, max_len=48, seed=1)
+    events = wl.schedule(200)
+    for ev in events:
+        assert 2 <= ev.prompt_len < 48
+        assert ev.max_new >= 2
+        assert ev.prompt_len + ev.max_new <= 48
+    pairs = wl.requests(events, vocab=128)
+    # materialisation is deterministic too
+    pairs2 = wl.requests(events, vocab=128)
+    for (t1, r1), (t2, r2) in zip(pairs, pairs2):
+        assert t1 == t2 and np.array_equal(r1.prompt, r2.prompt)
+
+
+# ---------------------------------------------------------------------------
+# admission: priorities, quotas, SLO shedding
+# ---------------------------------------------------------------------------
+
+def test_admission_priority_order():
+    adm = AdmissionController()
+    adm.enqueue(_req(0, priority=0))
+    adm.enqueue(_req(1, priority=5))
+    adm.enqueue(_req(2, priority=5))
+    admits, sheds = adm.select(free_slots=1, kv_free=1, batch_slots=1)
+    assert [r.rid for r in admits] == [1] and not sheds
+    admits, _ = adm.select(free_slots=2, kv_free=2, batch_slots=2)
+    # same-priority requests keep arrival order
+    assert [r.rid for r in admits] == [2, 0]
+
+
+def test_admission_kv_capacity_caps_admits():
+    adm = AdmissionController()
+    for i in range(4):
+        adm.enqueue(_req(i))
+    admits, sheds = adm.select(free_slots=4, kv_free=1, batch_slots=4)
+    assert len(admits) == 1 and not sheds
+    assert len(adm.backlog) == 3
+
+
+def test_admission_quota_defers_and_sheds_impossible():
+    adm = AdmissionController(default_quota=12)
+    adm.enqueue(_req(0, prompt_len=6, max_new=6))     # cost 12 == quota
+    adm.enqueue(_req(1, prompt_len=6, max_new=6))     # must wait
+    adm.enqueue(_req(2, prompt_len=6, max_new=20))    # cost 26 > quota
+    admits, sheds = adm.select(free_slots=4, kv_free=4, batch_slots=4)
+    assert [r.rid for r in admits] == [0]
+    assert [(r.rid, reason.split(":")[0]) for r, reason in sheds] == \
+        [(2, "quota")]
+    assert [r.rid for r in adm.backlog] == [1]        # deferred, not shed
+    assert adm.inflight["default"] == 12
+    # the tenant's own finish frees the quota
+    done = admits[0]
+    done.out_tokens = [1] * done.max_new
+    adm.observe_finish(done)
+    admits, sheds = adm.select(free_slots=4, kv_free=4, batch_slots=4)
+    assert [r.rid for r in admits] == [1] and not sheds
+    assert adm.peak_inflight["default"] == 12
+
+
+def test_engine_quota_enforced_end_to_end(model):
+    cfg, params = model
+    quota = 6 + 5                 # exactly one request in flight
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                      admission=AdmissionController(default_quota=quota))
+    for i in range(4):
+        eng.submit(_req(i, prompt_len=6, max_new=5, vocab=cfg.vocab))
+    assert eng.run_until_drained() == 0
+    served = [r for r in eng.done if r.failed is None]
+    assert len(served) == 4
+    assert all(len(r.out_tokens) == 5 for r in served)
+    assert eng.admission.peak_inflight["default"] <= quota
+
+
+def test_engine_slo_sheds_under_saturation(model):
+    """A saturating burst with a tiny TTFT deadline: once the cadence
+    is measured, deep-queue requests shed *before* burning a slot
+    (failed='slo', zero tokens) and the admitted ones still finish."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                      admission=AdmissionController(slo_ttft_s=1e-6))
+    for i in range(10):
+        eng.submit(_req(i, prompt_len=6, max_new=6, vocab=cfg.vocab))
+    assert eng.run_until_drained() == 0
+    served = [r for r in eng.done if r.failed is None]
+    shed = [r for r in eng.done if r.failed is not None]
+    assert served and shed, (len(served), len(shed))
+    assert all(r.failed.startswith("slo") for r in shed)
+    # shed early: before prefill, before any token
+    assert all(r.out_tokens == [] and r.t_first_pc == 0.0 for r in shed)
+    assert all(len(r.out_tokens) == 6 for r in served)
+    assert eng.admission.shed_slo == len(shed)
+
+
+# ---------------------------------------------------------------------------
+# fleet: routing, kill re-route, drain budgets
+# ---------------------------------------------------------------------------
+
+def test_fleet_reroute_on_replica_kill_bit_exact(model):
+    """Kill one of two replicas mid-run (shared memory plane): its
+    queue re-routes to the survivor and every request still produces
+    exactly the single-engine reference tokens."""
+    cfg, params = model
+    tenants = default_tenants(2, 64)
+    # burst arrivals: every request is routed before round 1, so the
+    # round-2 kill below always finds replica1 mid-flight (active slots
+    # + backlog) regardless of machine speed or warm jit caches
+    wl = Workload(parse_arrivals("burst"), tenants, max_len=64, seed=11)
+    events = wl.schedule(6)
+
+    ref = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                      access_path="xdma")
+    for _, req in wl.requests(events, cfg.vocab):
+        ref.submit(req)
+    assert ref.run_until_drained() == 0
+    ref_out = {r.rid: list(r.out_tokens) for r in ref.done
+               if r.failed is None}
+    ref.pager.close()
+
+    fr = FleetRouter.build(cfg, params, replicas=2, batch_slots=2,
+                           max_len=64, access_path="xdma",
+                           kill_replica_at=(2, "replica1"),
+                           admission_factory=AdmissionController)
+    assert fr.run_open_loop(wl.requests(events, cfg.vocab)) == 0
+    st = fr.stats()
+    fr.close()
+    assert st["killed_replicas"] == ["replica1"]
+    assert st["rerouted"] > 0
+    out = {r.rid: list(r.out_tokens) for r in fr.done_requests()
+           if r.failed is None}
+    assert set(out) == set(ref_out) == set(range(6))
+    assert out == ref_out          # bit-exact across kill + re-route
+
+
+def test_run_until_drained_deadline_budget(model):
+    """Satellite: the wall-clock budget alternative to max_steps; the
+    warning names both budgets."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    eng.submit(_req(0, vocab=cfg.vocab))
+    with pytest.warns(RuntimeWarning, match="undrained") as rec:
+        left = eng.run_until_drained(max_steps=10000, deadline_s=0.0)
+    assert left == 1
+    msg = str(rec[0].message)
+    assert "max_steps=10000" in msg and "deadline_s=0.0" in msg
+
+
+# ---------------------------------------------------------------------------
+# satellites: monotonic latency accounting, rejected section
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_latency_and_rejected_sections():
+    """e2e latency rides the monotonic clock pair, queue wait is its
+    own histogram, and failed requests are excluded from latency and
+    goodput but counted per reason under ``rejected``."""
+    from repro.launch import serve as serve_mod
+    out = serve_mod.main(["--arch", "qwen2-0.5b", "--smoke",
+                          "--requests", "3", "--slots", "2",
+                          "--max-new", "4", "--prompt-len", "70",
+                          "--max-len", "64"])
+    # every prompt is over-long: all rejected, nothing served
+    assert out["requests"] == 0 and out["tokens"] == 0
+    assert out["rejected"] == {"count": 3,
+                               "reasons": {"overlong": 3},
+                               "rids": [0, 1, 2]}
+    for key in ("ttft_s", "tpot_s", "queue_wait_s", "e2e_s"):
+        assert key in out["latency"], key
+    assert out["latency"]["ttft_s"]["count"] == 0
+
+
+def test_fleet_cli_result_sections():
+    from repro.launch import serve as serve_mod
+    out = serve_mod.main(["--arch", "qwen2-0.5b", "--smoke",
+                          "--requests", "4", "--slots", "2",
+                          "--max-new", "4", "--prompt-len", "6",
+                          "--max-len", "64", "--replicas", "2",
+                          "--arrivals", "poisson:100",
+                          "--tenants", "2"])
+    assert out["requests"] == 4 and out["undrained"] == 0
+    assert out["rejected"]["count"] == 0
+    assert out["goodput_tok_per_vs"] > 0
+    assert out["fleet"]["replicas"] == 2
+    assert sum(out["fleet"]["per_replica"][n]["routed"]
+               for n in out["fleet"]["per_replica"]) == 4
+    assert out["workload"]["arrivals"] == "poisson:100"
+    assert set(out["admission"]) == {"replica0", "replica1"}
+    # queue wait recorded per served request across the fleet
+    assert out["latency"]["queue_wait_s"]["count"] == 4
+    e2e = out["latency"]["e2e_s"]
+    assert e2e["count"] == 4 and e2e["min"] > 0
