@@ -1,0 +1,192 @@
+"""Install-path bench: fused PageLayout gather/scatter vs the per-leaf
+reference chain (DESIGN.md §11).
+
+Three measurements, each a gate in ``BENCH_install_path.json``:
+
+* **install latency** — scatter G staged pages into the batch cache,
+  fused (one program per dtype-group) vs the per-leaf ``slice -> view ->
+  .at[].set`` chain, across page sizes x group depths x buffer counts.
+  Gate: >= 1.5x faster at group depth >= 4.
+* **hop counts** — structural, not timed: a fused spill crosses D2H
+  once (the packed page) where the per-leaf chain pays one readback per
+  leaf; a batched resident writeback group crosses H2C once
+  (``TieredStore.write_pages``) where the loop pays one per page.
+* **parity** — the pallas kernels under ``interpret=True`` and the jit
+  path must reproduce the reference bytes exactly (asserted, recorded).
+
+    PYTHONPATH=src python -m benchmarks.install_path [--quick|--smoke]
+        [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call, write_bench_json
+from repro.configs import get_config, reduce_for_smoke
+from repro.kernels import ops
+from repro.models import transformer as T
+from repro.rmem import TieredStore
+
+ARCH = "qwen2-0.5b"
+BATCH = 8
+
+
+def _trees(max_len: int):
+    cfg = reduce_for_smoke(get_config(ARCH))
+    return (T.init_cache(cfg, 1, max_len),
+            T.init_cache(cfg, BATCH, max_len))
+
+
+def _randomize(tree, seed):
+    leaves, treedef = jax.tree.flatten(tree)
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            out.append(jnp.asarray(
+                rng.standard_normal(l.shape).astype(np.float32), l.dtype))
+        else:
+            out.append(jnp.asarray(rng.integers(0, 100, l.shape), l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _bench_install(max_len: int, depths, buffer_counts) -> list:
+    single, batch = _trees(max_len)
+    layout = ops.page_layout(single, batch, BATCH)
+    flat_b = jax.tree.leaves(_randomize(batch, 1))
+    rows = []
+    for G in depths:
+        pages = jnp.stack([
+            jnp.asarray(ops.pack_page_ref(
+                layout, jax.tree.leaves(_randomize(single, 10 + g))))
+            for g in range(G)])
+        slots = list(range(G))
+        ref_s = time_call(
+            lambda: jax.block_until_ready(
+                ops.install_pages_ref(layout, flat_b, pages, slots)),
+            repeats=5, warmup=1)
+        for nb in buffer_counts:
+            fused_s = time_call(
+                lambda: jax.block_until_ready(
+                    ops.install_pages(layout, flat_b, pages, slots,
+                                      mode="jit", n_buffers=nb)),
+                repeats=5, warmup=2)
+            speedup = ref_s / fused_s if fused_s > 0 else float("inf")
+            emit(f"install_fused[pb={layout.page_bytes},G={G},nb={nb}]",
+                 fused_s * 1e6,
+                 f"ref_us={ref_s*1e6:.1f};speedup={speedup:.2f}x")
+            rows.append({"page_bytes": layout.page_bytes, "depth": G,
+                         "n_buffers": nb, "ref_us": ref_s * 1e6,
+                         "fused_us": fused_s * 1e6,
+                         "speedup": speedup})
+    return rows
+
+
+def _bench_spill(max_len: int) -> dict:
+    single, batch = _trees(max_len)
+    layout = ops.page_layout(single, batch, BATCH)
+    leaves = jax.tree.leaves(_randomize(single, 3))
+    ref_s = time_call(lambda: ops.pack_page_ref(layout, leaves),
+                      repeats=5, warmup=1)
+    fused_s = time_call(
+        lambda: np.asarray(ops.pack_page(layout, leaves, mode="jit")),
+        repeats=5, warmup=2)
+    emit(f"spill_pack[pb={layout.page_bytes}]", fused_s * 1e6,
+         f"ref_us={ref_s*1e6:.1f};d2h_fused=1;d2h_ref={len(leaves)}")
+    return {"page_bytes": layout.page_bytes, "n_leaves": len(leaves),
+            "ref_us": ref_s * 1e6, "fused_us": fused_s * 1e6,
+            "d2h_hops_fused": 1, "d2h_hops_ref": len(leaves)}
+
+
+def _bench_staged_h2c(n_pages: int = 4) -> dict:
+    """Resident-page writeback hops: the per-page loop vs one batched
+    ``write_pages`` group (same bytes, one staged H2C)."""
+    def hops(batched: bool) -> int:
+        with TieredStore(n_pages, (64,), dtype="float32",
+                         n_hot_slots=n_pages) as st:
+            for p in range(n_pages):
+                st.write_page(p, np.full((64,), p, np.float32))
+            st.ensure(list(range(n_pages)))
+            updates = {p: np.full((64,), 90.0 + p, np.float32)
+                       for p in range(n_pages)}
+            if batched:
+                st.update_pages(updates)
+            else:
+                for p, v in updates.items():
+                    st.update_page(p, v)
+            return st.stats()["staged_hops"]
+    loop, batched = hops(False), hops(True)
+    emit(f"staged_h2c[n={n_pages}]", 0.0,
+         f"loop_hops={loop};batched_hops={batched}")
+    return {"n_pages": n_pages, "loop_hops": loop,
+            "batched_hops": batched}
+
+
+def _check_parity(max_len: int) -> bool:
+    single, batch = _trees(max_len)
+    layout = ops.page_layout(single, batch, BATCH)
+    flat_b = jax.tree.leaves(_randomize(batch, 4))
+    leaves = jax.tree.leaves(_randomize(single, 5))
+    ref_page = ops.pack_page_ref(layout, leaves)
+    for mode in ("jit", "pallas"):
+        got = np.asarray(ops.pack_page(layout, leaves, mode=mode,
+                                       interpret=True))
+        if not np.array_equal(got, ref_page):
+            return False
+    pages = jnp.stack([jnp.asarray(ref_page)] * 2)
+    slots = [3, 0]
+    want = ops.install_pages_ref(layout, flat_b, pages, slots)
+    for mode in ("jit", "pallas"):
+        got = ops.install_pages(layout, flat_b, pages, slots,
+                                mode=mode, interpret=True)
+        for g, w in zip(got, want):
+            if not np.array_equal(
+                    np.asarray(g).reshape(-1).view(np.uint8),
+                    np.asarray(w).reshape(-1).view(np.uint8)):
+                return False
+    return True
+
+
+def run(quick: bool = False, out: str = "") -> dict:
+    max_lens = [64] if quick else [64, 256]
+    depths = [1, 4] if quick else [1, 2, 4, 8]
+    buffer_counts = [2] if quick else [1, 2, 4]
+    install_rows = []
+    for ml in max_lens:
+        install_rows += _bench_install(ml, depths, buffer_counts)
+    spill = _bench_spill(max_lens[0])
+    staged = _bench_staged_h2c()
+    parity = _check_parity(max_lens[0])
+    emit("install_parity", 0.0, f"ok={parity}")
+    deep = [r["speedup"] for r in install_rows if r["depth"] >= 4]
+    payload = {
+        "arch": ARCH, "batch_slots": BATCH,
+        "install": install_rows, "spill": spill, "staged_h2c": staged,
+        "gate": {
+            "parity": parity,
+            "depth4_speedup": max(deep) if deep else 0.0,
+            "d2h_per_spill_fused": spill["d2h_hops_fused"],
+            "d2h_per_spill_ref": spill["d2h_hops_ref"],
+            "h2c_hops_batched": staged["batched_hops"],
+            "h2c_hops_loop": staged["loop_hops"],
+        }}
+    if out:
+        write_bench_json(out, payload)
+    return payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    run(quick=args.quick or args.smoke, out=args.json)
+
+
+if __name__ == "__main__":
+    main()

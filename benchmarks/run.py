@@ -14,8 +14,8 @@ import traceback
 
 from benchmarks import (chaos, common, completion_modes, contention,
                         e2e_step, fabric, far_memory, host_device_bw,
-                        offload_step, overlap, rdma_analogue, serve_slo,
-                        vmem_stream)
+                        install_path, offload_step, overlap,
+                        rdma_analogue, serve_slo, vmem_stream)
 from repro import obs
 
 MODULES = [
@@ -30,6 +30,7 @@ MODULES = [
     ("fabric_sweep", fabric),
     ("chaos_soak", chaos),
     ("serve_slo", serve_slo),
+    ("install_path", install_path),
     ("e2e_and_roofline", e2e_step),
 ]
 
@@ -56,6 +57,10 @@ def main(argv=None) -> None:
                     help="serving SLO bench JSON path (serve_slo "
                          "module); defaults to BENCH_serve_slo.json "
                          "with --smoke")
+    ap.add_argument("--install-json", default="",
+                    help="fused install-path bench JSON path "
+                         "(install_path module); defaults to "
+                         "BENCH_install_path.json with --smoke")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed recorded in every BENCH_*.json "
                          "(all benchmark generators are seeded; the "
@@ -84,6 +89,8 @@ def main(argv=None) -> None:
                                     if args.smoke else "")
     serve_slo_out = args.serve_slo_json or ("BENCH_serve_slo.json"
                                             if args.smoke else "")
+    install_out = args.install_json or ("BENCH_install_path.json"
+                                        if args.smoke else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -100,6 +107,8 @@ def main(argv=None) -> None:
                 mod.run(quick=quick, out=chaos_out)
             elif serve_slo_out and mod is serve_slo:
                 mod.run(quick=quick, out=serve_slo_out)
+            elif install_out and mod is install_path:
+                mod.run(quick=quick, out=install_out)
             else:
                 mod.run(quick=quick)
         except Exception:

@@ -10,8 +10,10 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import page_install as _pi
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.page_install import (PageLayout, page_layout)  # noqa: F401
 from repro.kernels.rg_lru import rg_lru_scan as _rg_lru
 from repro.kernels.streamcopy import stream_copy as _stream_copy
 
@@ -46,7 +48,32 @@ def rg_lru_scan(a, b, h0=None, *, block_t: int = 64, block_w: int = 256,
                    interpret=interp)
 
 
+def pack_page(layout, leaves, *, mode: str = "auto", n_buffers: int = 2,
+              interpret: Optional[bool] = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _pi.pack_page(layout, leaves, mode=mode, n_buffers=n_buffers,
+                         interpret=interp)
+
+
+def install_pages(layout, batch_leaves, pages, slots, *,
+                  mode: str = "auto", n_buffers: int = 2,
+                  interpret: Optional[bool] = None,
+                  donate: bool = False):
+    interp = _default_interpret() if interpret is None else interpret
+    return _pi.install_pages(layout, batch_leaves, pages, slots,
+                             mode=mode, n_buffers=n_buffers,
+                             interpret=interp, donate=donate)
+
+
+def install_slot(layout, batch_leaves, single_leaves, slot, *,
+                 donate: bool = False):
+    return _pi.install_slot(layout, batch_leaves, single_leaves, slot,
+                            donate=donate)
+
+
 # re-export oracles for test convenience
 attention_ref = ref.attention_ref
 stream_copy_ref = ref.stream_copy_ref
 rg_lru_scan_ref = ref.rg_lru_scan_ref
+pack_page_ref = _pi.pack_page_ref
+install_pages_ref = _pi.install_pages_ref

@@ -1,0 +1,582 @@
+"""Fused page install/spill: one-kernel gather/scatter between byte
+pages and the KV batch cache (DESIGN.md §11).
+
+The last hop of a page fetch used to be naive: a device-resident byte
+page was carved into cache leaves with one ``lax.slice`` + ``.view`` +
+``.at[slot].set`` chain *per leaf per page*, and spill packed leaves
+with one ``np.asarray`` D2H per leaf.  This module replaces both ends
+with layout-driven fused paths:
+
+* ``PageLayout`` — a precomputed, hashable descriptor of where every
+  cache leaf lives inside the packed page (byte offset, single-request
+  shape, dtype, slot axis in the batch tree).  Built once per
+  ``(treedef, shapes, batch)`` and cached; shared by the kernels, the
+  jit fallback, the host reference, and (via the unchanged byte format)
+  the checksum plane.
+* ``install_pages`` — scatter G staged pages into the batch cache tree.
+  ``mode="pallas"`` runs one ``pallas_call`` per dtype-group with
+  double-buffered VMEM staging (DMA-in of page k+1 overlaps the scatter
+  of page k — the in-kernel analogue of the §3.3 two-hop overlap);
+  ``mode="jit"`` is a single fused XLA program (the production path on
+  CPU backends, one dispatch instead of ``n_leaves × G``);
+  ``mode="ref"`` is the per-leaf legacy chain, kept as the parity
+  oracle.
+* ``pack_page`` — the scatter's gather twin for spill: pack one slot's
+  cache leaves into a contiguous uint8 page *on device*, so the caller
+  does a single D2H instead of per-leaf readbacks + host concatenate.
+* ``install_slot`` — the jitted replacement for the serving engine's
+  per-leaf ``_slot_cache_set`` (donated batch cache, static slot-axis
+  map), so non-paging installs stop paying per-admit dispatch overhead.
+
+Byte format contract: a page is the concatenation of every leaf's C
+-order bytes in tree-flatten order — identical to
+``np.concatenate([np.asarray(l).reshape(-1).view(np.uint8) ...])``, so
+fused and per-leaf paths (and the §9 checksums stamped over either) are
+bit-exact interchangeable.
+
+Kernel hazard discipline (the §2 ``streamcopy`` table, minus the put
+leg — scatter stores are synchronous in-kernel): per VMEM slot s and
+page g (slot = g % n_buffers): wait get(g) -> scatter leaves of g ->
+start get(g + n_buffers).  On this container the kernels run with
+``interpret=True``; ``mode="auto"`` picks pallas on TPU and the fused
+jit program elsewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# layout descriptor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """One cache leaf's place in the packed page.
+
+    ``shape`` is the single-request leaf shape (size 1 at the slot
+    axis); ``batch_shape`` the batch-tree leaf; ``slot_axis`` the axis
+    where the batch leaf has size ``batch`` and the single leaf size 1
+    (None = no such axis: the leaf merges by elementwise maximum, the
+    "len" counter rule)."""
+    index: int
+    offset: int
+    shape: Tuple[int, ...]
+    batch_shape: Tuple[int, ...]
+    dtype: str
+    slot_axis: Optional[int]
+
+    @property
+    def itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * self.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class PageLayout:
+    """Static map from a packed byte page to a batch cache tree."""
+    batch: int
+    page_bytes: int
+    leaves: Tuple[LeafSpec, ...]
+
+    def kernel_groups(self) -> Dict[str, List[LeafSpec]]:
+        """Leaves the fused kernels can handle, grouped by dtype: a
+        slot axis exists, ranks agree, and the leaf's byte offset is
+        aligned to its itemsize (bitcastable in place)."""
+        groups: Dict[str, List[LeafSpec]] = {}
+        for sp in self.leaves:
+            if sp.slot_axis is None or len(sp.shape) != len(sp.batch_shape):
+                continue
+            if sp.offset % sp.itemsize or sp.nbytes == 0:
+                continue
+            groups.setdefault(sp.dtype, []).append(sp)
+        return groups
+
+    def fallback_indices(self) -> Tuple[int, ...]:
+        """Leaf indices the kernels skip (installed by the jit path)."""
+        covered = {sp.index for g in self.kernel_groups().values()
+                   for sp in g}
+        return tuple(sp.index for sp in self.leaves
+                     if sp.index not in covered)
+
+
+def _slot_axis(bshape, oshape, batch: int) -> Optional[int]:
+    # the serving engine's structural rule, verbatim: first axis where
+    # the batch leaf has size B and the single-request leaf size 1
+    return next((i for i, (x, y) in enumerate(zip(bshape, oshape))
+                 if x == batch and y == 1), None)
+
+
+_LAYOUT_CACHE: Dict[tuple, PageLayout] = {}
+
+
+def page_layout(single_tree, batch_tree, batch: int) -> PageLayout:
+    """Build (or fetch the cached) ``PageLayout`` for a cache config.
+
+    Both trees may hold arrays or ``jax.ShapeDtypeStruct`` (use
+    ``jax.eval_shape`` to avoid materializing anything); they must share
+    a treedef.  Cached by ``(treedef, shapes, dtypes, batch)``.
+    """
+    singles, sdef = jax.tree.flatten(single_tree)
+    batches, bdef = jax.tree.flatten(batch_tree)
+    if sdef != bdef:
+        raise ValueError(f"tree mismatch: {sdef} vs {bdef}")
+    if len(singles) != len(batches):
+        raise ValueError("leaf count mismatch")
+    key = (str(sdef), batch,
+           tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in singles),
+           tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in batches))
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    specs, off = [], 0
+    for i, (o, b) in enumerate(zip(singles, batches)):
+        dt = jnp.dtype(o.dtype)
+        if jnp.dtype(b.dtype) != dt:
+            raise ValueError(
+                f"leaf {i}: dtype mismatch {b.dtype} vs {o.dtype}")
+        specs.append(LeafSpec(
+            index=i, offset=off, shape=tuple(o.shape),
+            batch_shape=tuple(b.shape), dtype=dt.name,
+            slot_axis=_slot_axis(b.shape, o.shape, batch)))
+        off += specs[-1].nbytes
+    layout = PageLayout(batch=batch, page_bytes=off, leaves=tuple(specs))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# byte <-> dtype plumbing (bit-exact with numpy .view on both ends)
+# ---------------------------------------------------------------------------
+
+def _leaf_to_bytes(leaf) -> jax.Array:
+    # bitcast appends a trailing itemsize axis (none for 1-byte dtypes);
+    # C-order flatten then matches numpy's reshape(-1).view(uint8)
+    return jax.lax.bitcast_convert_type(leaf, jnp.uint8).reshape(-1)
+
+
+def _bytes_to_leaf(seg, spec: LeafSpec) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(seg, dt).reshape(spec.shape)
+    return jax.lax.bitcast_convert_type(
+        seg.reshape(-1, dt.itemsize), dt).reshape(spec.shape)
+
+
+def _resolve_mode(mode: str) -> str:
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jit"
+    if mode not in ("pallas", "jit", "ref"):
+        raise ValueError(f"mode must be auto|pallas|jit|ref, got {mode!r}")
+    return mode
+
+
+def _normalize_pages(layout: PageLayout, pages):
+    """Accept either a (G, page_bytes) uint8 array or a sequence of
+    ``(buf, row)`` entries — ``buf`` a (page_bytes,) page (row None) or
+    a (Gk, page_bytes) staged group with ``row`` selecting one page —
+    and return (bufs tuple, rows int32 array, G)."""
+    if hasattr(pages, "ndim"):
+        if pages.ndim == 1:
+            pages = pages[None]
+        G = pages.shape[0]
+        if pages.shape[1] != layout.page_bytes:
+            raise ValueError(f"page width {pages.shape[1]} != "
+                             f"layout {layout.page_bytes}")
+        bufs = tuple(pages[g] for g in range(G))
+        rows = jnp.zeros((G,), jnp.int32)
+        return bufs, rows, G
+    bufs, rows = [], []
+    for buf, row in pages:
+        bufs.append(buf)
+        rows.append(0 if row is None else int(row))
+    return tuple(bufs), jnp.asarray(rows, jnp.int32), len(bufs)
+
+
+# ---------------------------------------------------------------------------
+# reference (per-leaf legacy chain — the parity oracle)
+# ---------------------------------------------------------------------------
+
+def pack_page_ref(layout: PageLayout, leaves) -> np.ndarray:
+    """Host-side per-leaf pack: one D2H readback per leaf (the legacy
+    ``_page_store`` chain).  Defines the page byte format."""
+    out = np.concatenate(
+        [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
+    if out.nbytes != layout.page_bytes:
+        raise ValueError(f"packed {out.nbytes} != {layout.page_bytes}")
+    return out
+
+
+def install_pages_ref(layout: PageLayout, batch_leaves, pages, slots):
+    """Per-leaf reference install: the ``slice -> view -> reshape ->
+    .at[slot].set`` chain of the legacy ``_page_fetch``/
+    ``_slot_cache_set``, one dispatch per leaf per page."""
+    bufs, rows, G = _normalize_pages(layout, pages)
+    out = list(batch_leaves)
+    for g in range(G):
+        pg = bufs[g] if bufs[g].ndim == 1 else bufs[g][int(rows[g])]
+        sl = int(slots[g])
+        for sp in layout.leaves:
+            piece = jax.lax.slice(pg, (sp.offset,),
+                                  (sp.offset + sp.nbytes,))
+            val = piece.view(sp.dtype).reshape(sp.shape)
+            b = out[sp.index]
+            if sp.slot_axis is None:
+                out[sp.index] = jnp.maximum(b, val)
+                continue
+            idx = [slice(None)] * b.ndim
+            idx[sp.slot_axis] = sl
+            src = [slice(None)] * val.ndim
+            src[sp.slot_axis] = 0
+            out[sp.index] = b.at[tuple(idx)].set(val[tuple(src)])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused jit paths (single XLA program; the CPU production path)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pack_jit(layout: PageLayout):
+    def fn(leaves):
+        return jnp.concatenate([_leaf_to_bytes(l) for l in leaves])
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _install_jit(layout: PageLayout, buf_shapes: tuple, donate: bool,
+                 only: Optional[tuple]):
+    """One fused scatter program per (layout, staging shape): every
+    selected leaf of every page installs in a single dispatch.  ``only``
+    restricts to a leaf-index subset (the pallas path's non-kernel
+    leftovers); None = all leaves."""
+    keep = None if only is None else frozenset(only)
+
+    def fn(batch_leaves, bufs, rows, slots):
+        pages = [b if b.ndim == 1
+                 else jax.lax.dynamic_index_in_dim(b, rows[g], 0,
+                                                   keepdims=False)
+                 for g, b in enumerate(bufs)]
+        out = list(batch_leaves)
+        for sp in layout.leaves:
+            if keep is not None and sp.index not in keep:
+                continue
+            for g, pg in enumerate(pages):
+                seg = jax.lax.dynamic_slice(pg, (sp.offset,),
+                                            (sp.nbytes,))
+                val = _bytes_to_leaf(seg, sp)
+                b = out[sp.index]
+                if sp.slot_axis is None:
+                    out[sp.index] = jnp.maximum(b, val)
+                    continue
+                starts = [jnp.int32(0)] * b.ndim
+                starts[sp.slot_axis] = slots[g]
+                out[sp.index] = jax.lax.dynamic_update_slice(
+                    b, val, tuple(starts))
+        return tuple(out)
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def _slot_set_jit(layout: PageLayout, donate: bool):
+    """Jitted ``_slot_cache_set``: scatter one single-request cache tree
+    into the batch tree at ``slot`` (traced — no recompile per slot),
+    optionally donating the batch leaves for in-place update."""
+    def fn(batch_leaves, single_leaves, slot):
+        out = list(batch_leaves)
+        for sp in layout.leaves:
+            b, o = out[sp.index], single_leaves[sp.index]
+            if sp.slot_axis is None:
+                out[sp.index] = jnp.maximum(b, o)
+                continue
+            starts = [jnp.int32(0)] * b.ndim
+            starts[sp.slot_axis] = slot
+            out[sp.index] = jax.lax.dynamic_update_slice(
+                b, o, tuple(starts))
+        return tuple(out)
+
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _can_donate(leaves) -> bool:
+    # donating the same buffer twice is a hard XLA error; a cache tree
+    # with structurally shared leaves must fall back to copy semantics
+    return len({id(l) for l in leaves}) == len(leaves)
+
+
+# ---------------------------------------------------------------------------
+# pallas fused kernels
+# ---------------------------------------------------------------------------
+
+def _group_span(specs: Sequence[LeafSpec]) -> Tuple[int, int]:
+    lo = min(sp.offset for sp in specs)
+    hi = max(sp.offset + sp.nbytes for sp in specs)
+    return lo, hi
+
+
+def _install_group_kernel(slots_ref, pages, *rest, specs, span_lo,
+                          n_buffers, n_pages):
+    """Scatter one dtype-group's leaves of all pages into the batch
+    cache.  §2 hazard discipline, minus the put leg (stores are
+    synchronous): wait get(g) -> scatter g -> start get(g+n_buffers)."""
+    n = len(specs)
+    outs = rest[n:2 * n]        # aliased: rest[:n] are the inputs
+    scratch = rest[2 * n:]
+    bufs, sems = scratch[:n_buffers], scratch[n_buffers:]
+    k = jnp.dtype(specs[0].dtype).itemsize
+
+    def get(slot, g):
+        return pltpu.make_async_copy(pages.at[g], bufs[slot], sems[slot])
+
+    for s in range(min(n_buffers, n_pages)):
+        get(s, s).start()
+
+    def body(g, _):
+        slot = jax.lax.rem(g, n_buffers)
+
+        def per_slot(s):
+            get(s, g).wait()
+            sl = slots_ref[g]
+            for j, sp in enumerate(specs):
+                off_w = (sp.offset - span_lo) // k
+                n_w = sp.nbytes // k
+                val = bufs[s][pl.ds(off_w, n_w)].reshape(sp.shape)
+                idx = tuple(pl.ds(sl, 1) if i == sp.slot_axis
+                            else slice(None)
+                            for i in range(len(sp.batch_shape)))
+                outs[j][idx] = val
+            nxt = g + n_buffers
+
+            @pl.when(nxt < n_pages)
+            def _prefetch():
+                get(s, nxt).start()
+
+        jax.lax.switch(slot, [functools.partial(per_slot, s)
+                              for s in range(n_buffers)])
+        return 0
+
+    jax.lax.fori_loop(0, n_pages, body, 0)
+
+
+def _pages_as_words(pages2d, lo: int, hi: int, dtype) -> jax.Array:
+    """Byte-slice the staged pages to one dtype-group's span and bitcast
+    to that dtype's words (alignment guaranteed by kernel_groups)."""
+    k = jnp.dtype(dtype).itemsize
+    G = pages2d.shape[0]
+    span = jax.lax.slice(pages2d, (0, lo), (G, hi))
+    if k == 1:
+        return jax.lax.bitcast_convert_type(span, dtype)
+    return jax.lax.bitcast_convert_type(
+        span.reshape(G, (hi - lo) // k, k), dtype)
+
+
+def _install_pallas(layout: PageLayout, batch_leaves, bufs, rows, slots,
+                    n_buffers: int, interpret: bool):
+    # materialize the (G, page_bytes) staging view once (row selection
+    # fused into one program), then one pallas_call per dtype group
+    G = len(bufs)
+    stack = _stack_pages(tuple(b.shape for b in bufs))(bufs, rows)
+    slots_i32 = jnp.asarray(slots, jnp.int32)
+    out = list(batch_leaves)
+    for dt, specs in sorted(layout.kernel_groups().items()):
+        lo, hi = _group_span(specs)
+        words = _pages_as_words(stack, lo, hi, jnp.dtype(dt))
+        nb = max(1, min(n_buffers, G))
+        kernel = functools.partial(
+            _install_group_kernel, specs=tuple(specs), span_lo=lo,
+            n_buffers=nb, n_pages=G)
+        n = len(specs)
+        res = pl.pallas_call(
+            kernel,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                      pl.BlockSpec(memory_space=pl.ANY)]
+                     + [pl.BlockSpec(memory_space=pl.ANY)] * n,
+            out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n,
+            out_shape=[jax.ShapeDtypeStruct(sp.batch_shape,
+                                            jnp.dtype(sp.dtype))
+                       for sp in specs],
+            input_output_aliases={2 + j: j for j in range(n)},
+            scratch_shapes=(
+                [pltpu.VMEM((words.shape[1],), jnp.dtype(dt))] * nb
+                + [pltpu.SemaphoreType.DMA] * nb),
+            interpret=interpret,
+        )(slots_i32, words, *[out[sp.index] for sp in specs])
+        for j, sp in enumerate(specs):
+            out[sp.index] = res[j]
+    rest = layout.fallback_indices()
+    if rest:
+        fb = _install_jit(layout, tuple(b.shape for b in bufs),
+                          False, rest)
+        out = list(fb(tuple(out), bufs, rows, slots_i32))
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _stack_pages(buf_shapes: tuple):
+    def fn(bufs, rows):
+        return jnp.stack([
+            b if b.ndim == 1
+            else jax.lax.dynamic_index_in_dim(b, rows[g], 0,
+                                              keepdims=False)
+            for g, b in enumerate(bufs)])
+    return jax.jit(fn)
+
+
+def _pack_group_kernel(*refs, specs, span_lo):
+    """Gather one dtype-group's leaves into a contiguous span image:
+    all leaf DMAs start up front (each staging buffer is used exactly
+    once — no reuse hazard), then each leaf's copy is waited and its
+    words stored as soon as it lands, overlapping DMA-in of the rest."""
+    n = len(specs)
+    ins = refs[:n]
+    out = refs[n]
+    scratch = refs[n + 1:]
+    bufs, sems = scratch[:n], scratch[n:]
+    k = jnp.dtype(specs[0].dtype).itemsize
+    copies = [pltpu.make_async_copy(ins[j], bufs[j], sems[j])
+              for j in range(n)]
+    for c in copies:
+        c.start()
+    # zero the span image while the DMAs fly: gap words (bytes owned by
+    # other dtype groups) must read 0 for the stitch's disjoint add
+    out[...] = jnp.zeros(out.shape, out.dtype)
+    for j, sp in enumerate(specs):
+        copies[j].wait()
+        off_w = (sp.offset - span_lo) // k
+        n_w = sp.nbytes // k
+        out[pl.ds(off_w, n_w)] = bufs[j][...].reshape(-1)
+
+
+def _pack_pallas(layout: PageLayout, leaves, n_buffers: int,
+                 interpret: bool):
+    """Fused device-side pack: one gather kernel per dtype group writes
+    its span image (gaps zeroed), then a single jitted stitch adds the
+    byte images into the final page — non-kernel leaves take the
+    bitcast-concat path for their segments."""
+    groups = sorted(layout.kernel_groups().items())
+    images = []
+    for dt, specs in groups:
+        lo, hi = _group_span(specs)
+        k = jnp.dtype(dt).itemsize
+        kernel = functools.partial(_pack_group_kernel, specs=tuple(specs),
+                                   span_lo=lo)
+        img = pl.pallas_call(
+            kernel,
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * len(specs),
+            out_specs=pl.BlockSpec(memory_space=pl.ANY),
+            out_shape=jax.ShapeDtypeStruct(((hi - lo) // k,),
+                                           jnp.dtype(dt)),
+            scratch_shapes=(
+                [pltpu.VMEM(sp.shape, jnp.dtype(dt)) for sp in specs]
+                + [pltpu.SemaphoreType.DMA] * len(specs)),
+            interpret=interpret,
+        )(*[leaves[sp.index] for sp in specs])
+        images.append((lo, hi, img))
+    spans = tuple((lo, hi) for lo, hi, _ in images)
+    rest = layout.fallback_indices()
+    return _pack_stitch(layout, spans, rest)(
+        tuple(img for _, _, img in images),
+        tuple(leaves[i] for i in rest))
+
+
+@functools.lru_cache(maxsize=None)
+def _pack_stitch(layout: PageLayout, spans: tuple, rest: tuple):
+    """Merge dtype-group span images (disjoint nonzero bytes — gaps in
+    a span belong to other groups and are zero there) plus the
+    non-kernel leaves' segments into one uint8 page."""
+    by_index = {sp.index: sp for sp in layout.leaves}
+
+    def fn(images, rest_leaves):
+        page = jnp.zeros((layout.page_bytes,), jnp.uint8)
+        for (lo, hi), img in zip(spans, images):
+            page = page.at[lo:hi].add(_leaf_to_bytes(img))
+        for i, leaf in zip(rest, rest_leaves):
+            sp = by_index[i]
+            page = jax.lax.dynamic_update_slice(
+                page, _leaf_to_bytes(leaf), (sp.offset,))
+        return page
+
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def pack_page(layout: PageLayout, leaves, *, mode: str = "auto",
+              n_buffers: int = 2,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Pack one slot's cache leaves into a (page_bytes,) uint8 page on
+    device.  The caller's single ``np.asarray`` is then the spill's only
+    D2H hop.  Bit-identical to ``pack_page_ref`` in every mode."""
+    mode = _resolve_mode(mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    leaves = tuple(leaves)
+    if len(leaves) != len(layout.leaves):
+        raise ValueError(f"{len(leaves)} leaves != layout "
+                         f"{len(layout.leaves)}")
+    if mode == "ref":
+        return jnp.asarray(pack_page_ref(layout, leaves))
+    if mode == "jit":
+        return _pack_jit(layout)(leaves)
+    return _pack_pallas(layout, leaves, n_buffers, interpret)
+
+
+def install_pages(layout: PageLayout, batch_leaves, pages, slots, *,
+                  mode: str = "auto", n_buffers: int = 2,
+                  interpret: Optional[bool] = None,
+                  donate: bool = False):
+    """Scatter G staged pages into the batch cache leaves at ``slots``.
+
+    ``pages``: a (G, page_bytes) uint8 array, or a sequence of
+    ``(buf, row)`` entries straight from ``TieredStore.ensure_packed``
+    (``buf`` a staged (Gk, page_bytes) group, ``row`` its page's row —
+    no per-row split ever happens).  Returns the new leaf list in
+    tree-flatten order.  ``donate=True`` releases the old batch leaves
+    to XLA for in-place update (jit path; callers must drop their own
+    references)."""
+    mode = _resolve_mode(mode)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch_leaves = tuple(batch_leaves)
+    bufs, rows, G = _normalize_pages(layout, pages)
+    if len(slots) != G:
+        raise ValueError(f"{len(slots)} slots != {G} pages")
+    if mode == "ref":
+        return install_pages_ref(layout, batch_leaves, pages, slots)
+    if mode == "pallas":
+        return _install_pallas(layout, batch_leaves, bufs, rows, slots,
+                               n_buffers, interpret)
+    donate = donate and _can_donate(batch_leaves)
+    fn = _install_jit(layout, tuple(b.shape for b in bufs), donate, None)
+    return list(fn(batch_leaves, bufs, rows,
+                   jnp.asarray(slots, jnp.int32)))
+
+
+def install_slot(layout: PageLayout, batch_leaves, single_leaves, slot,
+                 *, donate: bool = False):
+    """Jitted single-slot cache install (the fused ``_slot_cache_set``):
+    one dispatch, traced slot index, optional donation of the batch
+    leaves.  Returns the new leaf list in tree-flatten order."""
+    batch_leaves = tuple(batch_leaves)
+    single_leaves = tuple(single_leaves)
+    if len(batch_leaves) != len(layout.leaves) or \
+            len(single_leaves) != len(layout.leaves):
+        raise ValueError("leaf count != layout")
+    donate = donate and _can_donate(batch_leaves)
+    fn = _slot_set_jit(layout, donate)
+    return list(fn(batch_leaves, single_leaves,
+                   jnp.asarray(slot, jnp.int32)))

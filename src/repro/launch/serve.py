@@ -147,6 +147,13 @@ def main(argv=None) -> dict:
                     help="blocking admission: join every page fetch "
                          "before decoding (the serial baseline the "
                          "overlap bench measures against)")
+    ap.add_argument("--fused-install", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="route cache install/spill through the fused "
+                         "PageLayout kernels (one scatter per fetch "
+                         "group, one D2H per spill); --no-fused-install "
+                         "selects the per-leaf reference chain — output "
+                         "is bit-exact either way (DESIGN.md §11)")
     ap.add_argument("--kv-node-latency", type=float, default=0.0,
                     help="modeled far-memory link RTT in seconds, paid "
                          "once per doorbell on the verbs path (the "
@@ -267,7 +274,8 @@ def main(argv=None) -> dict:
                       kv_doorbell=args.kv_doorbell,
                       overlap=not args.no_overlap,
                       kv_node_latency_s=args.kv_node_latency,
-                      kv_retry=retry_policy, kv_integrity=faults_on)
+                      kv_retry=retry_policy, kv_integrity=faults_on,
+                      fused_install=args.fused_install)
     plan = flaps = None
     if faults_on:
         if args.fault_flap is not None:
@@ -322,6 +330,9 @@ def main(argv=None) -> dict:
               "overlap": eng.overlap,
               "overlap_installs": eng.overlap_installs,
               "blocking_installs": eng.blocking_installs,
+              "install": {"fused": eng.install_fused,
+                          "fallback": eng.install_fallback,
+                          "hops_saved": eng.install_hops_saved},
               "latency": lat_sum,
               "outputs": {r.rid: list(r.out_tokens) for r in served}}
     if plan is not None:
@@ -402,7 +413,7 @@ def _main_fleet(args, cfg, params, access, kv_shards, faults_on,
         kv_doorbell=args.kv_doorbell, overlap=not args.no_overlap,
         kv_node_latency_s=args.kv_node_latency, kv_retry=retry_policy,
         kv_integrity=faults_on, admission_factory=mk_admission,
-        kill_replica_at=kill_at)
+        kill_replica_at=kill_at, fused_install=args.fused_install)
     plan = None
     if faults_on:
         plan = _faults.install(FaultPlan(
@@ -458,6 +469,13 @@ def _main_fleet(args, cfg, params, access, kv_shards, faults_on,
                           for e in router.engines.values()),
               "access_path": access, "undrained": undrained,
               "latency": lat_sum,
+              "install": {
+                  "fused": sum(e.install_fused
+                               for e in router.engines.values()),
+                  "fallback": sum(e.install_fallback
+                                  for e in router.engines.values()),
+                  "hops_saved": sum(e.install_hops_saved
+                                    for e in router.engines.values())},
               "outputs": {r.rid: list(r.out_tokens) for r in served},
               "fleet": fleet, "admission": adm,
               "workload": {"arrivals": arrivals.describe(),

@@ -32,6 +32,17 @@ The miss path is an asynchronous, batched pipeline (DESIGN.md §3.3):
 Residency is otherwise unchanged from ``KVPager``: LRU eviction over
 ``n_hot_slots`` device slots, ``h2c_bytes``/``c2h_bytes`` accounting;
 cold-tier traffic is accounted by the backend.
+
+Since the fused install path (DESIGN.md §11) a slot landed as part of a
+staged group keeps a *lazy* reference ``(group_array, row)`` instead of
+an eager per-row split: ``ensure_packed`` hands those ``(buf, row)``
+pairs straight to the fused installer (no ``_device_row`` split ever
+runs on that path), while ``ensure`` and any per-slot reader
+materialize the row on first touch via ``_slot_array``.  Resident-page
+writebacks batch into one staged H2C per call group
+(``write_pages``/``update_pages``); ``staged_hops``/
+``staged_hops_saved`` count the transfers and the per-page hops the
+batching removed.
 """
 from __future__ import annotations
 
@@ -112,8 +123,13 @@ class TieredStore:
         self.checksums: Optional[PageChecksums] = None
         if integrity and getattr(self.backend, "checksums", None) is None:
             self.checksums = PageChecksums()
-        # device (hot) slots
+        # device (hot) slots; _slot_src[s] = (staged_group, row) for
+        # slots whose page still lives unsplit inside a group H2C
+        # landing — _slot_array materializes the row on first per-slot
+        # touch, fused installers consume the pair directly
         self.slots: List[Optional[jax.Array]] = [None] * self.n_hot_slots
+        self._slot_src: List[Optional[Tuple[jax.Array, int]]] = \
+            [None] * self.n_hot_slots
         self.slot_of_page: Dict[int, int] = {}
         self.page_in_slot: List[Optional[int]] = [None] * self.n_hot_slots
         self._clock = 0
@@ -128,6 +144,8 @@ class TieredStore:
         self.writeback_bytes_skipped = 0
         self.prefetch_issued = 0
         self.prefetch_hits = 0
+        self.staged_hops = 0            # resident-writeback H2C transfers
+        self.staged_hops_saved = 0      # per-page hops batching removed
 
     # -- cold-tier typed views ------------------------------------------
     def _to_typed(self, raw: np.ndarray) -> np.ndarray:
@@ -197,6 +215,15 @@ class TieredStore:
                 raw[k] = self._load_cold(p)
         return raw
 
+    def _slot_array(self, s: int) -> Optional[jax.Array]:
+        """The slot's device array, materializing a lazily-held staged
+        group row on first per-slot touch."""
+        src = self._slot_src[s]
+        if src is not None:
+            self.slots[s] = _device_row(src[0], src[1])
+            self._slot_src[s] = None
+        return self.slots[s]
+
     def read_page(self, page: int) -> np.ndarray:
         """Cold-tier view of a page (host copy, typed).  If the page is
         device-resident its slot is authoritative — drain it first."""
@@ -204,10 +231,33 @@ class TieredStore:
             raise IndexError(page)
         if page in self.slot_of_page:
             s = self.slot_of_page[page]
-            host = np.asarray(self.engine.read(self.slots[s]).wait())
+            host = np.asarray(self.engine.read(self._slot_array(s)).wait())
             self.c2h_bytes += self.page_bytes
             return host
         return self._to_typed(self._load_cold(page))
+
+    def _stage_resident(self, items: Sequence[Tuple[int, np.ndarray]]
+                        ) -> None:
+        """Push host values into resident pages' hot slots — ONE staged
+        H2C transfer for the whole call group (the double-hop fix: the
+        old path paid a blocking ``engine.write(arr).wait()`` per page).
+        Rows stay lazy, exactly like a group miss landing."""
+        if not items:
+            return
+        self.staged_hops += 1
+        self.h2c_bytes += self.page_bytes * len(items)
+        if len(items) == 1:
+            page, arr = items[0]
+            s = self.slot_of_page[page]
+            self.slots[s] = self.engine.write(arr).wait()
+            self._slot_src[s] = None
+            return
+        dev = self.engine.write(np.stack([a for _, a in items])).wait()
+        for k, (page, _) in enumerate(items):
+            s = self.slot_of_page[page]
+            self.slots[s] = None
+            self._slot_src[s] = (dev, k)
+        self.staged_hops_saved += len(items) - 1
 
     def write_page(self, page: int, value) -> None:
         """Update a page (cold tier + device copy if resident).
@@ -215,24 +265,34 @@ class TieredStore:
         Both copies end in sync, so the page is clean afterwards; any
         in-flight prefetch of the old bytes is invalidated.
         """
-        if page < 0 or page >= self.n_pages:
-            raise IndexError(page)
-        arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
-        stale = self._prefetch.pop(page, None)
-        if stale is not None:
-            # fence the in-flight read before overwriting its staging row,
-            # else the read scatters old bytes over the new value and a
-            # remote store would then push those stale bytes cold
-            try:
-                stale[0].wait()
-            except Exception:
-                pass                        # discarded fetch; store decides
-        self._store_cold(page, arr.reshape(-1).view(np.uint8))
-        self._dirty.discard(page)
-        if page in self.slot_of_page:
-            s = self.slot_of_page[page]
-            self.slots[s] = self.engine.write(arr).wait()
-            self.h2c_bytes += self.page_bytes
+        self.write_pages({page: value})
+
+    def write_pages(self, updates) -> None:
+        """Batched ``write_page``: every value lands cold, and all
+        device-resident pages of the call share one staged H2C transfer
+        instead of one blocking write each (counted in
+        ``staged_hops``/``staged_hops_saved``)."""
+        items = []
+        for page, value in updates.items():
+            if page < 0 or page >= self.n_pages:
+                raise IndexError(page)
+            items.append((page, np.asarray(value, self._np_dtype)
+                          .reshape(self.page_shape)))
+        for page, _ in items:
+            stale = self._prefetch.pop(page, None)
+            if stale is not None:
+                # fence the in-flight read before overwriting its staging
+                # row, else the read scatters old bytes over the new value
+                # and a remote store would then push those stale bytes cold
+                try:
+                    stale[0].wait()
+                except Exception:
+                    pass                    # discarded fetch; store decides
+        for page, arr in items:
+            self._store_cold(page, arr.reshape(-1).view(np.uint8))
+            self._dirty.discard(page)
+        self._stage_resident([(p, a) for p, a in items
+                              if p in self.slot_of_page])
 
     # -- dirty tracking --------------------------------------------------
     def mark_dirty(self, page: int) -> None:
@@ -249,14 +309,21 @@ class TieredStore:
         """Device-side page update: installs ``value`` into the resident
         page's hot slot (H2C) and marks it dirty — the cold copy is stale
         until eviction/release writes it back."""
-        if page not in self.slot_of_page:
-            raise KeyError(f"page {page} is not resident")
-        arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
-        s = self.slot_of_page[page]
-        self.slots[s] = self.engine.write(arr).wait()
-        self.h2c_bytes += self.page_bytes
-        self._dirty.add(page)
-        return self.slots[s]
+        self.update_pages({page: value})
+        return self._slot_array(self.slot_of_page[page])
+
+    def update_pages(self, updates) -> None:
+        """Batched ``update_page``: all pages (each must be resident)
+        share one staged H2C transfer and are marked dirty."""
+        items = []
+        for page, value in updates.items():
+            if page not in self.slot_of_page:
+                raise KeyError(f"page {page} is not resident")
+            items.append((page, np.asarray(value, self._np_dtype)
+                          .reshape(self.page_shape)))
+        self._stage_resident(items)
+        for page, _ in items:
+            self._dirty.add(page)
 
     # -- residency -------------------------------------------------------
     def _evict(self) -> int:
@@ -268,7 +335,8 @@ class TieredStore:
                 obs.instant("tier.evict", page=old,
                             dirty=old in self._dirty)
             if old in self._dirty:
-                host = np.asarray(self.engine.read(self.slots[s]).wait())
+                host = np.asarray(
+                    self.engine.read(self._slot_array(s)).wait())
                 self.c2h_bytes += self.page_bytes
                 self._store_cold(old, host.reshape(-1).view(np.uint8))
                 self._dirty.discard(old)
@@ -279,6 +347,7 @@ class TieredStore:
                 self.writeback_bytes_skipped += self.page_bytes
             del self.slot_of_page[old]
         self.page_in_slot[s] = None
+        self._slot_src[s] = None
         return s
 
     def _fetch_depth(self, n_missing: int) -> int:
@@ -360,6 +429,34 @@ class TieredStore:
         land — while later groups' cold fetches are still in flight.
         Prefetched pages join their already-running fetch.
         """
+        self._ensure(pages)
+        out = {}
+        for p in pages:
+            s = self.slot_of_page[p]
+            self._clock += 1
+            self._last_use[s] = self._clock
+            out[p] = self._slot_array(s)
+        return out
+
+    def ensure_packed(self, pages) -> Dict[int, Tuple[jax.Array,
+                                                      Optional[int]]]:
+        """``ensure`` for the fused install path (DESIGN.md §11): makes
+        pages resident through the same pipeline but returns
+        ``{page: (staged_buffer, row)}`` — a page landed in a group H2C
+        keeps its ``(group, row)`` pair *unsplit* (row ``None`` means
+        the buffer IS the page), so the whole fetch group flows into one
+        fused scatter kernel with no ``_device_row`` per-row split."""
+        self._ensure(pages)
+        out = {}
+        for p in pages:
+            s = self.slot_of_page[p]
+            self._clock += 1
+            self._last_use[s] = self._clock
+            src = self._slot_src[s]
+            out[p] = src if src is not None else (self.slots[s], None)
+        return out
+
+    def _ensure(self, pages) -> None:
         t0 = time.perf_counter()
         if len(set(pages)) > self.n_hot_slots:
             raise ValueError(f"requested {len(set(pages))} pages > "
@@ -438,9 +535,15 @@ class TieredStore:
                 dev = tr.wait()
                 if len(slots_g) == 1:
                     self.slots[slots_g[0]] = dev
+                    self._slot_src[slots_g[0]] = None
                 else:
+                    # keep the staged group whole: each slot remembers its
+                    # (group, row) source and only splits on first per-slot
+                    # touch (_slot_array) — fused installers consume the
+                    # pair directly and never pay the per-row split
                     for k, s in enumerate(slots_g):
-                        self.slots[s] = _device_row(dev, k)
+                        self.slots[s] = None
+                        self._slot_src[s] = (dev, k)
                 installed.update(slots_g)
                 self.h2c_bytes += self.page_bytes * len(slots_g)
         except BaseException:
@@ -452,6 +555,7 @@ class TieredStore:
                     self.slot_of_page.pop(p, None)
                     self.page_in_slot[s] = None
                     self.slots[s] = None
+                    self._slot_src[s] = None
                     self._last_use[s] = 0
             raise
         if missing and obs.trace.enabled():
@@ -461,13 +565,6 @@ class TieredStore:
                          args={"pages": len(pages),
                                "miss": len(missing),
                                "prefetch_hits": len(fetched)})
-        out = {}
-        for p in pages:
-            s = self.slot_of_page[p]
-            self._clock += 1
-            self._last_use[s] = self._clock
-            out[p] = self.slots[s]
-        return out
 
     def release(self, page: int, writeback: Optional[bool] = None) -> None:
         """Drop a page's residency.
@@ -481,12 +578,13 @@ class TieredStore:
             return
         s = self.slot_of_page.pop(page)
         if writeback is not False and page in self._dirty:
-            host = np.asarray(self.engine.read(self.slots[s]).wait())
+            host = np.asarray(self.engine.read(self._slot_array(s)).wait())
             self.c2h_bytes += self.page_bytes
             self._store_cold(page, host.reshape(-1).view(np.uint8))
         self._dirty.discard(page)
         self.page_in_slot[s] = None
         self.slots[s] = None
+        self._slot_src[s] = None
         self._last_use[s] = 0
 
     @property
@@ -523,7 +621,9 @@ class TieredStore:
             "dirty_evictions": self.evictions - self.clean_evictions,
             "writeback_bytes_skipped": self.writeback_bytes_skipped,
             "prefetch_issued": self.prefetch_issued,
-            "prefetch_hits": self.prefetch_hits})
+            "prefetch_hits": self.prefetch_hits,
+            "staged_hops": self.staged_hops,
+            "staged_hops_saved": self.staged_hops_saved})
 
     def close(self) -> None:
         for io, _ in list(self._prefetch.values()):

@@ -55,6 +55,7 @@ import numpy as np
 from repro import cplane, obs
 from repro.access.registry import create_path
 from repro.faults.retry import RETRIABLE, RetryPolicy
+from repro.kernels import ops
 from repro.models import lm
 from repro.models import transformer as T
 from repro.rmem.store import TieredStore
@@ -163,6 +164,7 @@ class ServeEngine:
                  admission=None,
                  shared_path=None, page_base: int = 0,
                  total_pages: Optional[int] = None,
+                 fused_install: bool = True,
                  name: str = "engine0"):
         if kv_backend is not None:
             warnings.warn(
@@ -234,6 +236,15 @@ class ServeEngine:
         self._pending_install: Dict[int, Tuple] = {}
         self.overlap_installs = 0       # installs that joined a settled
         self.blocking_installs = 0      # ... vs had to block/join inline
+        # fused install/spill path (DESIGN.md §11): route the cache
+        # scatter/gather through the PageLayout kernels instead of the
+        # per-leaf slice/.at[].set chain — bit-exact either way
+        self.fused_install = fused_install
+        self._layout = None             # PageLayout, built lazily
+        self.install_fused = 0          # slots installed via the kernel
+        self.install_fallback = 0       # ... vs the per-leaf chain
+        self.install_hops_saved = 0     # per-leaf D2H readbacks avoided
+        self._admit_spills: List[int] = []   # pages spilled this admit
         self.kv_shards = kv_shards
         self.kv_replicas = kv_replicas
         self.kv_kill_step = kv_kill_step
@@ -358,16 +369,37 @@ class ServeEngine:
             free += 1
         return free
 
+    def _install_layout(self):
+        """The engine's ``PageLayout`` (DESIGN.md §11), built once per
+        engine from the cache treedef via ``eval_shape`` (no cache
+        materialization) and shared by the fused install, spill and slot
+        kernels."""
+        if self._layout is None:
+            single = jax.eval_shape(
+                lambda: T.init_cache(self.cfg, 1, self.max_len))
+            batch = jax.eval_shape(
+                lambda: T.init_cache(self.cfg, self.B, self.max_len))
+            self._layout = ops.page_layout(single, batch, self.B)
+        return self._layout
+
     def _slot_cache_set(self, slot: int, new_caches) -> None:
         """Write one slot's prefilled (B=1) cache into the batch cache tree.
 
         The batch axis is located structurally: it is the axis where the
         batch leaf has size ``B`` and the single-request leaf has size 1
         (stacked group caches are (G, B, ...), tail caches (B, ...), and
-        per-layer "len" scalars have no batch axis at all).
+        per-layer "len" scalars have no batch axis at all).  With
+        ``fused_install`` the whole update runs as one jitted donated
+        scatter keyed on the PageLayout's slot-axis map, instead of the
+        unjitted per-leaf ``.at[].set`` loop re-dispatched every admit.
         """
         flat_b, treedef = jax.tree.flatten(self.caches)
         flat_o = jax.tree.leaves(new_caches)
+        if self.fused_install:
+            out = ops.install_slot(self._install_layout(), flat_b,
+                                   flat_o, slot, donate=True)
+            self.caches = jax.tree.unflatten(treedef, out)
+            return
         out = []
         for b, o in zip(flat_b, flat_o):
             ax = next((i for i, (x, y) in enumerate(zip(b.shape, o.shape))
@@ -384,12 +416,34 @@ class ServeEngine:
 
     def _page_store(self, slot: int, leaves) -> None:
         """Pack a slot's prefilled cache to one byte page, spill it to the
-        cold tier, and *prefetch* it — the async fetch (one-sided verbs or
-        host gather) runs while admission moves on to other slots."""
-        packed = np.concatenate(
-            [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
+        cold tier, and queue its *prefetch* — the whole admission round's
+        fetches are issued in one batched call from ``_admit``, and the
+        async fetch (one-sided verbs or host gather) runs while admission
+        moves on to other slots.
+
+        Fused path: the pack runs as one on-device gather kernel and
+        crosses C2H as ONE readback of the packed page; the per-leaf
+        chain pays one blocking ``np.asarray`` per leaf plus a host
+        ``np.concatenate``.  Identical bytes either way.
+        """
+        if self.fused_install:
+            page = ops.pack_page(self._install_layout(), leaves)
+            packed = np.asarray(page)
+            self.install_hops_saved += max(0, len(leaves) - 1)
+        else:
+            packed = np.concatenate(
+                [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
         self.pager.write_page(self._pg(slot), packed)
-        self.pager.prefetch([self._pg(slot)])
+        self._admit_spills.append(self._pg(slot))
+
+    def _flush_spill_prefetch(self) -> None:
+        """Start every page prefetch this admission round queued, in one
+        call — the miss pipeline batches them into doorbell-depth fetch
+        groups, so K admitted slots pay one batched issue (and one
+        staged H2C per group on the fused path), not K."""
+        if self._admit_spills:
+            self.pager.prefetch(self._admit_spills)
+            self._admit_spills = []
 
     def _page_fetch(self, slot: int, leaves, treedef):
         """Join the slot's in-flight prefetch (``ensure`` finds the bytes
@@ -488,6 +542,7 @@ class ServeEngine:
                 if req is None:
                     break
                 self._start_request(s, req)
+            self._flush_spill_prefetch()
             return
         # controller path: ingress -> backlog (overlong rejected at the
         # door: no policy can fix a prompt the engine cannot hold)
@@ -508,9 +563,16 @@ class ServeEngine:
             self._shed(req, reason)
         for s, req in zip(free, admits):
             self._start_request(s, req)
+        self._flush_spill_prefetch()
 
     def _install(self, s: int, req: Request, tok: int, caches1) -> None:
         self._slot_cache_set(s, caches1)
+        self._install_meta(s, req, tok)
+
+    def _install_meta(self, s: int, req: Request, tok: int) -> None:
+        """Post-scatter slot bookkeeping: the part of an install that is
+        per-request metadata, split out so the fused group path can run
+        ONE scatter kernel for many slots and then account each."""
         self.slot_req[s] = req
         self.slot_left[s] = req.max_new - 1
         self.slot_pos[s] = len(req.prompt)
@@ -609,15 +671,59 @@ class ServeEngine:
                 # fetch inline so the loop always progresses
                 ready = [pending[0]]
                 self.blocking_installs += 1
-        for s in ready:
-            req, tok, leaves, treedef = self._pending_install.pop(s)
-            with obs.span("serve.install", rid=req.rid, slot=s):
-                try:
-                    caches1 = self._page_fetch(s, leaves, treedef)
-                except RETRIABLE as e:
-                    self._shed(req, f"kv page fetch failed: {e}", slot=s)
-                    continue
-                self._install(s, req, tok, caches1)
+        if not ready:
+            return
+        if self.fused_install:
+            self._install_ready_fused(ready)
+        else:
+            for s in ready:
+                self._install_one(s)
+
+    def _install_one(self, s: int) -> None:
+        """Per-leaf reference install for one slot: join its fetch, slice
+        the device page back into cache leaves, scatter leaf by leaf."""
+        req, tok, leaves, treedef = self._pending_install.pop(s)
+        with obs.span("serve.install", rid=req.rid, slot=s,
+                      path="fallback"):
+            try:
+                caches1 = self._page_fetch(s, leaves, treedef)
+            except RETRIABLE as e:
+                self._shed(req, f"kv page fetch failed: {e}", slot=s)
+                return
+            self._install(s, req, tok, caches1)
+            self.install_fallback += 1
+            if obs.metrics.live():
+                obs.default_registry().counter(
+                    "serve.install_fallback").inc()
+
+    def _install_ready_fused(self, ready: List[int]) -> None:
+        """Install a whole group of settled slots through ONE fused
+        scatter: ``ensure_packed`` hands back each page's staged
+        ``(buffer, row)`` pair unsplit, and a single ``install_pages``
+        call scatters every leaf of every page into the batch cache.  A
+        group-level paging failure degrades to the per-slot reference
+        path so only the slots whose fetch actually failed shed."""
+        try:
+            packed = self.pager.ensure_packed(
+                [self._pg(s) for s in ready])
+        except RETRIABLE:
+            for s in ready:
+                self._install_one(s)
+            return
+        entries = [packed[self._pg(s)] for s in ready]
+        meta = [self._pending_install.pop(s) for s in ready]
+        with obs.span("serve.install", path="fused", slots=len(ready),
+                      rids=[m[0].rid for m in meta]):
+            flat_b, treedef = jax.tree.flatten(self.caches)
+            out = ops.install_pages(self._install_layout(), flat_b,
+                                    entries, ready, donate=True)
+            self.caches = jax.tree.unflatten(treedef, out)
+        self.install_fused += len(ready)
+        if obs.metrics.live():
+            obs.default_registry().counter(
+                "serve.install_fused").inc(len(ready))
+        for s, (req, tok, _leaves, _treedef) in zip(ready, meta):
+            self._install_meta(s, req, tok)
 
     def _maybe_kill_node(self) -> None:
         """Fail one fabric member at the configured step (fault

@@ -331,7 +331,8 @@ class FleetRouter:
               kv_node_latency_s: float = 0.0, kv_retry=None,
               kv_integrity: bool = False, admission_factory=None,
               kill_replica_at: Optional[Tuple[int, str]] = None,
-              affinity_slack_tokens: int = 64) -> "FleetRouter":
+              affinity_slack_tokens: int = 64,
+              fused_install: bool = True) -> "FleetRouter":
         """Build N replicas over one memory plane.
 
         ``replicas == 1`` degrades to the legacy single-engine shape:
@@ -358,7 +359,7 @@ class FleetRouter:
                 overlap_grace_s=overlap_grace_s,
                 kv_node_latency_s=kv_node_latency_s, kv_retry=kv_retry,
                 kv_integrity=kv_integrity, admission=mk_adm(),
-                name="replica0")
+                fused_install=fused_install, name="replica0")
             return cls([eng], kill_replica_at=None,
                        affinity_slack_tokens=affinity_slack_tokens)
         paged = access_path is not None or kv_shards > 1
@@ -400,7 +401,7 @@ class FleetRouter:
                 page_base=i * batch_slots,
                 total_pages=replicas * batch_slots if shared is not None
                 else None,
-                name=f"replica{i}"))
+                fused_install=fused_install, name=f"replica{i}"))
         return cls(engines, fabric=shared if kv_shards > 1 else None,
                    manager=manager, kv_kill_step=kv_kill_step,
                    kill_replica_at=kill_replica_at,

@@ -77,3 +77,203 @@ def test_rg_lru_no_initial_state():
     got = ops.rg_lru_scan(a, b, None, block_t=8, block_w=128, interpret=True)
     want = ops.rg_lru_scan_ref(a, b, None)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused page install/spill (DESIGN.md §11): gather/scatter parity vs the
+# per-leaf reference chain, across every configs/ cache family
+# ---------------------------------------------------------------------------
+
+from repro.configs import get_config, reduce_for_smoke  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+# attn / ssm (rwkv) / moe / vlm (mrope) / hybrid (rglru): between them
+# these cover stacked-group leaves, (B,) "len" counters, f32 ssm state
+# and every cache dtype the zoo emits
+FAMILIES = ["qwen2-0.5b", "rwkv6-1.6b", "qwen2-moe-a2.7b",
+            "qwen2-vl-7b", "recurrentgemma-2b"]
+BATCH = 3
+
+
+def _cache_trees(arch, max_len=32):
+    cfg = reduce_for_smoke(get_config(arch))
+    return (T.init_cache(cfg, 1, max_len),
+            T.init_cache(cfg, BATCH, max_len))
+
+
+def _randomize(tree, seed):
+    """Random values of each leaf's own dtype (no NaN bit patterns, so
+    byte-compare == value-compare)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    rng = np.random.default_rng(seed)
+    out = []
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            out.append(jnp.asarray(
+                rng.standard_normal(l.shape).astype(np.float32), l.dtype))
+        else:
+            out.append(jnp.asarray(
+                rng.integers(0, 100, l.shape), l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _leaf_bytes(l):
+    return np.asarray(l).reshape(-1).view(np.uint8)
+
+
+def _assert_trees_bit_exact(got, want):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.shape == w.shape and g.dtype == w.dtype
+        np.testing.assert_array_equal(_leaf_bytes(g), _leaf_bytes(w))
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("mode", ["jit", "pallas"])
+def test_pack_page_parity(arch, mode):
+    single, batch = _cache_trees(arch)
+    layout = ops.page_layout(single, batch, BATCH)
+    leaves = jax.tree.leaves(_randomize(single, 11))
+    got = ops.pack_page(layout, leaves, mode=mode, interpret=True)
+    want = ops.pack_page_ref(layout, leaves)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("mode", ["jit", "pallas"])
+@pytest.mark.parametrize("n_buffers", [1, 2])
+def test_install_pages_parity(arch, mode, n_buffers):
+    single, batch = _cache_trees(arch)
+    layout = ops.page_layout(single, batch, BATCH)
+    flat_b = jax.tree.leaves(_randomize(batch, 5))
+    pages = jnp.stack([
+        jnp.asarray(ops.pack_page_ref(
+            layout, jax.tree.leaves(_randomize(single, 20 + g))))
+        for g in range(2)])
+    slots = [2, 0]
+    got = ops.install_pages(layout, flat_b, pages, slots,
+                            mode=mode, n_buffers=n_buffers,
+                            interpret=True)
+    want = ops.install_pages_ref(layout, flat_b, pages, slots)
+    _assert_trees_bit_exact(got, want)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_install_entries_form_matches_stacked(arch):
+    """The TieredStore handoff shape: a staged (Gk, page_bytes) group
+    plus a row index per page — must equal installing the split rows."""
+    single, batch = _cache_trees(arch)
+    layout = ops.page_layout(single, batch, BATCH)
+    flat_b = jax.tree.leaves(_randomize(batch, 6))
+    pages = jnp.stack([
+        jnp.asarray(ops.pack_page_ref(
+            layout, jax.tree.leaves(_randomize(single, 30 + g))))
+        for g in range(3)])
+    slots = [1, 2, 0]
+    # group of two (rows swapped) + one whole page, vs the plain stack
+    entries = [(pages[:2], 1), (pages[:2], 0), (pages[2], None)]
+    got = ops.install_pages(layout, flat_b, entries,
+                            [slots[1], slots[0], slots[2]],
+                            mode="jit")
+    want = ops.install_pages_ref(layout, flat_b, pages, slots)
+    _assert_trees_bit_exact(got, want)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_install_slot_matches_per_leaf_set(arch):
+    """The jitted _slot_cache_set twin vs the engine's legacy loop."""
+    single, batch = _cache_trees(arch)
+    layout = ops.page_layout(single, batch, BATCH)
+    flat_b = jax.tree.leaves(_randomize(batch, 7))
+    flat_o = jax.tree.leaves(_randomize(single, 8))
+    slot = 1
+    got = ops.install_slot(layout, flat_b, flat_o, slot)
+    want = []
+    for b, o in zip(flat_b, flat_o):
+        ax = next((i for i, (x, y) in enumerate(zip(b.shape, o.shape))
+                   if x == BATCH and y == 1), None)
+        if ax is None:
+            want.append(jnp.maximum(b, o))
+            continue
+        idx = [slice(None)] * b.ndim
+        idx[ax] = slot
+        src = [slice(None)] * o.ndim
+        src[ax] = 0
+        want.append(b.at[tuple(idx)].set(o[tuple(src)]))
+    _assert_trees_bit_exact(got, want)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("mode", ["jit", "pallas"])
+def test_pack_install_round_trip(arch, mode):
+    """Spill then fetch through the fused path lands the exact cache
+    bytes back in the slot."""
+    single, batch = _cache_trees(arch)
+    layout = ops.page_layout(single, batch, BATCH)
+    src = _randomize(single, 9)
+    page = ops.pack_page(layout, jax.tree.leaves(src), mode=mode,
+                         interpret=True)
+    flat_b = jax.tree.leaves(jax.tree.map(
+        lambda l: jnp.zeros(l.shape, l.dtype),
+        T.init_cache(reduce_for_smoke(get_config(arch)), BATCH, 32)))
+    out = ops.install_pages(layout, flat_b, page[None], [1],
+                            mode=mode, interpret=True)
+    for sp, got in zip(layout.leaves, out):
+        want = jax.tree.leaves(src)[sp.index]
+        if sp.slot_axis is None:
+            np.testing.assert_array_equal(
+                _leaf_bytes(got), _leaf_bytes(want))
+            continue
+        idx = [slice(None)] * got.ndim
+        idx[sp.slot_axis] = 1
+        np.testing.assert_array_equal(
+            _leaf_bytes(got[tuple(idx)]), _leaf_bytes(want[
+                tuple(0 if i == sp.slot_axis else slice(None)
+                      for i in range(want.ndim))]))
+
+
+def test_page_layout_cached_and_validated():
+    single, batch = _cache_trees("qwen2-0.5b")
+    l1 = ops.page_layout(single, batch, BATCH)
+    l2 = ops.page_layout(single, batch, BATCH)
+    assert l1 is l2                       # cached by (treedef, shapes)
+    assert l1.page_bytes == sum(
+        l.nbytes for l in jax.tree.leaves(single))
+    bad = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.int8), batch)
+    with pytest.raises(ValueError):
+        ops.page_layout(single, bad, BATCH)
+
+
+def test_layout_round_trip_property():
+    """Any (offsets, shapes, dtypes) layout round-trips pack -> install
+    bit-exactly (hypothesis sweep over synthetic cache trees)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.kernels import page_install as pk
+
+    dtypes = st.sampled_from(["uint8", "int16", "int32", "float32",
+                              "bfloat16"])
+    leaf = st.tuples(
+        dtypes, st.lists(st.integers(1, 4), min_size=0, max_size=2))
+    B = 3
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(st.lists(leaf, min_size=1, max_size=5),
+               st.integers(0, B - 1), st.integers(0, 2 ** 31 - 1))
+    def prop(spec, slot, seed):
+        rng = np.random.default_rng(seed)
+        singles, batches = [], []
+        for dt, dims in spec:
+            raw = rng.integers(0, 100, (B, *dims))
+            batches.append(jnp.asarray(raw, dt))
+            singles.append(jnp.asarray(raw[:1], dt))
+        layout = pk.page_layout(tuple(singles), tuple(batches), B)
+        page = pk.pack_page(layout, singles, mode="jit")
+        ref = pk.pack_page_ref(layout, singles)
+        np.testing.assert_array_equal(np.asarray(page), ref)
+        out = pk.install_pages(layout, batches, page[None], [slot],
+                               mode="jit")
+        for sp, got in zip(layout.leaves, out):
+            np.testing.assert_array_equal(
+                _leaf_bytes(got[slot]), _leaf_bytes(singles[sp.index][0]))
+
+    prop()

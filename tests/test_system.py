@@ -107,3 +107,34 @@ def test_serve_continuous_batching_reuses_slots():
     assert len(eng.done) == 5
     for req in eng.done:
         assert len(req.out_tokens) == 4
+
+
+def test_serve_fused_install_bit_exact_vs_per_leaf():
+    """The fused PageLayout install/spill path changes HOW cache bytes
+    move (one gather D2H per spill, one group scatter per install),
+    never what they decode: token-for-token identical to the per-leaf
+    reference chain, with the install counters attributing the path."""
+    base = ["--arch", "qwen2-0.5b", "--smoke", "--requests", "5",
+            "--slots", "2", "--max-new", "6", "--prompt-len", "8",
+            "--max-len", "64", "--access-path", "verbs"]
+    fused = serve_mod.main(base + ["--fused-install"])
+    legacy = serve_mod.main(base + ["--no-fused-install"])
+    assert fused["outputs"] == legacy["outputs"]
+    assert fused["undrained"] == legacy["undrained"] == 0
+    assert fused["install"]["fused"] == 5
+    assert fused["install"]["fallback"] == 0
+    assert fused["install"]["hops_saved"] > 0
+    assert legacy["install"]["fused"] == 0
+    assert legacy["install"]["fallback"] == 5
+    assert legacy["install"]["hops_saved"] == 0
+
+
+def test_serve_fused_install_bit_exact_no_paging():
+    """Without paging the fused flag still swaps _slot_cache_set for the
+    jitted donated scatter — outputs must not move."""
+    base = ["--arch", "qwen2-0.5b", "--smoke", "--requests", "4",
+            "--slots", "2", "--max-new", "5", "--prompt-len", "8",
+            "--max-len", "64"]
+    fused = serve_mod.main(base + ["--fused-install"])
+    legacy = serve_mod.main(base + ["--no-fused-install"])
+    assert fused["outputs"] == legacy["outputs"]
