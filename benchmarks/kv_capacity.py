@@ -1,0 +1,207 @@
+"""KV capacity multipliers bench: tier-boundary codecs and
+cross-request prefix sharing (DESIGN.md §12).
+
+Three measurements, each a gate in ``BENCH_kv_capacity.json``:
+
+* **codec sweep** — spill N float32 pages through a ``TieredStore``
+  per codec x access path; record logical vs physical spill bytes and
+  the per-page encode/fetch cost.  Gate: int8 spills >= 2x fewer cold
+  bytes than codec=none (it is ~4x on float32 pages).
+* **shared-prefix admission uplift** — a byte-capped engine
+  (``kv_capacity_bytes`` = 4 physical pages) serves 16 requests that
+  share one prompt prefix; peak concurrent active slots with
+  ``prefix_share`` on vs off.  Gate: >= 1.5x (delta pages cost a
+  fraction of a page, so the same fabric budget admits ~2x).
+* **bit-exactness** — serve tokens are identical with codec bf16 vs
+  none (bf16 caches encode losslessly) and with prefix sharing on vs
+  off (delta reconstruction is exact).  Both asserted and recorded.
+
+    PYTHONPATH=src python -m benchmarks.kv_capacity [--quick|--smoke]
+        [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_call, write_bench_json
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import transformer as T
+from repro.rmem import TieredStore
+from repro.serving import AdmissionController
+from repro.serving.engine import (Request, ServeEngine, page_bytes_for,
+                                  page_codec_for)
+
+ARCH = "qwen2-0.5b"
+PAGE_ELEMS = 4096               # float32 -> 16 KiB logical pages
+
+
+def _bench_codecs(paths, n_pages: int = 8) -> list:
+    """Spill/fetch float32 pages per codec x path; the spill-byte ratio
+    is the capacity multiplier the codec buys on the cold tier."""
+    rng = np.random.default_rng(11)
+    vals = [rng.standard_normal(PAGE_ELEMS).astype(np.float32)
+            for _ in range(n_pages)]
+    rows = []
+    for path in paths:
+        for codec in ("none", "bf16", "int8"):
+            with TieredStore(n_pages, (PAGE_ELEMS,), dtype="float32",
+                             n_hot_slots=n_pages, codec=codec,
+                             path=path) as st:
+                store_s = time_call(
+                    lambda: [st.write_page(p, vals[p])
+                             for p in range(n_pages)],
+                    repeats=3, warmup=1)
+                def fetch():
+                    for p in range(n_pages):
+                        st.release(p, writeback=False)
+                    got = st.ensure(list(range(n_pages)))
+                    jax.block_until_ready(list(got.values()))
+                st.ensure(list(range(n_pages)))
+                fetch_s = time_call(fetch, repeats=3, warmup=1)
+                kv = st.stats()
+                ratio = kv["spill_bytes_logical"] / \
+                    max(kv["spill_bytes_physical"], 1)
+                emit(f"kv_codec[{path},{codec}]",
+                     store_s / n_pages * 1e6,
+                     f"fetch_us={fetch_s/n_pages*1e6:.1f};"
+                     f"spill_ratio={ratio:.2f};"
+                     f"phys_page={kv['phys_page_bytes']}")
+                rows.append({
+                    "path": path, "codec": codec,
+                    "page_bytes": kv["page_bytes"],
+                    "phys_page_bytes": kv["phys_page_bytes"],
+                    "spill_bytes_logical": kv["spill_bytes_logical"],
+                    "spill_bytes_physical": kv["spill_bytes_physical"],
+                    "spill_ratio": ratio,
+                    "store_us_per_page": store_s / n_pages * 1e6,
+                    "fetch_us_per_page": fetch_s / n_pages * 1e6,
+                    "projected_cold_s": kv["cold_projected_seconds"]})
+    return rows
+
+
+def _model():
+    cfg = reduce_for_smoke(get_config(ARCH))
+    params = T.tree_init(T.param_defs(cfg), cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _shared_requests(cfg, n: int, prompt_len: int = 12,
+                     prefix_len: int = 8, max_new: int = 8):
+    rng = np.random.default_rng(5)
+    pfx = rng.integers(0, cfg.vocab, prefix_len).astype(np.int32)
+    reqs = []
+    for r in range(n):
+        p = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+        p[:prefix_len] = pfx
+        reqs.append(Request(rid=r, prompt=p, max_new=max_new,
+                            prefix_len=prefix_len))
+    return reqs
+
+
+def _peak_concurrency(cfg, params, share: bool, capacity_pages: int = 4,
+                      slots: int = 8, n_requests: int = 16) -> dict:
+    """Peak concurrent active slots under a physical-byte budget: the
+    admission controller refills against free cold bytes, so sharing's
+    fractional page costs turn directly into admitted concurrency."""
+    cap = capacity_pages * page_bytes_for(cfg, 64)
+    eng = ServeEngine(cfg, params, batch_slots=slots, max_len=64,
+                      access_path="xdma", prefix_share=share,
+                      admission=AdmissionController(),
+                      kv_capacity_bytes=cap)
+    for req in _shared_requests(cfg, n_requests):
+        eng.submit(req)
+    peak = steps = 0
+    while steps < 600:
+        steps += 1
+        active = eng.step()
+        peak = max(peak, active)
+        if active == 0 and eng.idle():
+            break
+    served = sum(1 for r in eng.done if r.failed is None)
+    kv = eng.pager.stats()
+    eng.pager.close()
+    return {"share": share, "peak_active": peak, "steps": steps,
+            "served": served, "capacity_pages": capacity_pages,
+            "shared_pages": kv["shared_pages"],
+            "cow_copies": kv["cow_copies"],
+            "dedup_bytes_saved": kv["dedup_bytes_saved"]}
+
+
+def _serve_tokens(cfg, params, *, codec: str = "none",
+                  share: bool = False, shared_prompts: bool = False
+                  ) -> dict:
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=64,
+                      access_path="xdma", kv_codec=codec,
+                      prefix_share=share)
+    if shared_prompts:
+        reqs = _shared_requests(cfg, 4, max_new=4)
+    else:
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=r, prompt=rng.integers(
+            0, cfg.vocab, 12).astype(np.int32), max_new=4)
+            for r in range(4)]
+    for req in reqs:
+        eng.submit(req)
+    eng.run_until_drained()
+    out = {r.rid: list(r.out_tokens) for r in eng.done
+           if r.failed is None}
+    eng.pager.close()
+    return out
+
+
+def run(quick: bool = False, out: str = "") -> dict:
+    paths = ["xdma"] if quick else ["xdma", "verbs"]
+    codec_rows = _bench_codecs(paths)
+    by_codec = {r["codec"]: r for r in codec_rows if r["path"] == "xdma"}
+    int8_ratio = (by_codec["none"]["spill_bytes_physical"] /
+                  max(by_codec["int8"]["spill_bytes_physical"], 1))
+
+    cfg, params = _model()
+    off = _peak_concurrency(cfg, params, share=False)
+    on = _peak_concurrency(cfg, params, share=True)
+    uplift = on["peak_active"] / max(off["peak_active"], 1)
+    emit("kv_share_uplift", 0.0,
+         f"peak_on={on['peak_active']};peak_off={off['peak_active']};"
+         f"uplift={uplift:.2f}x;capacity_pages={off['capacity_pages']}")
+
+    tok_none = _serve_tokens(cfg, params, codec="none")
+    tok_bf16 = _serve_tokens(cfg, params, codec="bf16")
+    bitexact_bf16 = tok_none == tok_bf16
+    tok_noshare = _serve_tokens(cfg, params, shared_prompts=True)
+    tok_share = _serve_tokens(cfg, params, share=True,
+                              shared_prompts=True)
+    bitexact_share = tok_noshare == tok_share
+    emit("kv_bitexact", 0.0,
+         f"bf16={bitexact_bf16};share={bitexact_share}")
+    assert bitexact_bf16, "bf16 codec changed serve tokens"
+    assert bitexact_share, "prefix sharing changed serve tokens"
+
+    payload = {
+        "arch": ARCH, "page_elems": PAGE_ELEMS,
+        "codecs": codec_rows,
+        "share": {"off": off, "on": on, "uplift": uplift},
+        "gate": {
+            "int8_spill_ratio": int8_ratio,
+            "share_admit_uplift": uplift,
+            "bitexact_bf16": bitexact_bf16,
+            "bitexact_share": bitexact_share,
+        }}
+    if out:
+        write_bench_json(out, payload)
+    return payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    run(quick=args.quick or args.smoke, out=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ import traceback
 
 from benchmarks import (chaos, common, completion_modes, contention,
                         e2e_step, fabric, far_memory, host_device_bw,
-                        install_path, offload_step, overlap,
+                        install_path, kv_capacity, offload_step, overlap,
                         rdma_analogue, serve_slo, vmem_stream)
 from repro import obs
 
@@ -31,6 +31,7 @@ MODULES = [
     ("chaos_soak", chaos),
     ("serve_slo", serve_slo),
     ("install_path", install_path),
+    ("kv_capacity", kv_capacity),
     ("e2e_and_roofline", e2e_step),
 ]
 
@@ -61,6 +62,10 @@ def main(argv=None) -> None:
                     help="fused install-path bench JSON path "
                          "(install_path module); defaults to "
                          "BENCH_install_path.json with --smoke")
+    ap.add_argument("--kv-capacity-json", default="",
+                    help="KV capacity-multipliers bench JSON path "
+                         "(kv_capacity module); defaults to "
+                         "BENCH_kv_capacity.json with --smoke")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed recorded in every BENCH_*.json "
                          "(all benchmark generators are seeded; the "
@@ -91,6 +96,8 @@ def main(argv=None) -> None:
                                             if args.smoke else "")
     install_out = args.install_json or ("BENCH_install_path.json"
                                         if args.smoke else "")
+    kv_capacity_out = args.kv_capacity_json or ("BENCH_kv_capacity.json"
+                                                if args.smoke else "")
 
     print("name,us_per_call,derived")
     failed = []
@@ -109,6 +116,8 @@ def main(argv=None) -> None:
                 mod.run(quick=quick, out=serve_slo_out)
             elif install_out and mod is install_path:
                 mod.run(quick=quick, out=install_out)
+            elif kv_capacity_out and mod is kv_capacity:
+                mod.run(quick=quick, out=kv_capacity_out)
             else:
                 mod.run(quick=quick)
         except Exception:

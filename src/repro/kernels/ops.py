@@ -58,11 +58,12 @@ def pack_page(layout, leaves, *, mode: str = "auto", n_buffers: int = 2,
 def install_pages(layout, batch_leaves, pages, slots, *,
                   mode: str = "auto", n_buffers: int = 2,
                   interpret: Optional[bool] = None,
-                  donate: bool = False):
+                  donate: bool = False, codec=None):
     interp = _default_interpret() if interpret is None else interpret
     return _pi.install_pages(layout, batch_leaves, pages, slots,
                              mode=mode, n_buffers=n_buffers,
-                             interpret=interp, donate=donate)
+                             interpret=interp, donate=donate,
+                             codec=codec)
 
 
 def install_slot(layout, batch_leaves, single_leaves, slot, *,

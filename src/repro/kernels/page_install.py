@@ -182,23 +182,27 @@ def _resolve_mode(mode: str) -> str:
     return mode
 
 
-def _normalize_pages(layout: PageLayout, pages):
-    """Accept either a (G, page_bytes) uint8 array or a sequence of
-    ``(buf, row)`` entries — ``buf`` a (page_bytes,) page (row None) or
-    a (Gk, page_bytes) staged group with ``row`` selecting one page —
-    and return (bufs tuple, rows int32 array, G)."""
+def _normalize_pages(layout: PageLayout, pages,
+                     width: Optional[int] = None):
+    """Accept either a (G, width) uint8 array or a sequence of
+    ``(buf, row)`` entries — ``buf`` a (width,) page (row None) or
+    a (Gk, width) staged group with ``row`` selecting one page —
+    and return (bufs tuple, rows int32 array, G).  ``width`` defaults
+    to the logical page size; a codec install passes its encoded size."""
+    width = layout.page_bytes if width is None else width
     if hasattr(pages, "ndim"):
         if pages.ndim == 1:
             pages = pages[None]
         G = pages.shape[0]
-        if pages.shape[1] != layout.page_bytes:
-            raise ValueError(f"page width {pages.shape[1]} != "
-                             f"layout {layout.page_bytes}")
+        if pages.shape[1] != width:
+            raise ValueError(f"page width {pages.shape[1]} != {width}")
         bufs = tuple(pages[g] for g in range(G))
         rows = jnp.zeros((G,), jnp.int32)
         return bufs, rows, G
     bufs, rows = [], []
     for buf, row in pages:
+        if buf.shape[-1] != width:
+            raise ValueError(f"page width {buf.shape[-1]} != {width}")
         bufs.append(buf)
         rows.append(0 if row is None else int(row))
     return tuple(bufs), jnp.asarray(rows, jnp.int32), len(bufs)
@@ -255,12 +259,30 @@ def _pack_jit(layout: PageLayout):
 
 
 @functools.lru_cache(maxsize=None)
+def _codec_segmap(codec) -> Dict[int, object]:
+    return {s.offset: s for s in codec.segs}
+
+
+def _codec_seg(codec, sp: LeafSpec):
+    """The codec segment backing a layout leaf — offsets, widths and
+    dtypes must agree or the encoded page was built for another tree."""
+    seg = _codec_segmap(codec).get(sp.offset)
+    if seg is None or seg.nbytes != sp.nbytes or seg.dtype != sp.dtype:
+        raise ValueError(f"codec segment mismatch at byte {sp.offset}: "
+                         f"layout leaf {sp.dtype}x{sp.nbytes}B, codec "
+                         f"has {seg}")
+    return seg
+
+
+@functools.lru_cache(maxsize=None)
 def _install_jit(layout: PageLayout, buf_shapes: tuple, donate: bool,
-                 only: Optional[tuple]):
+                 only: Optional[tuple], codec=None):
     """One fused scatter program per (layout, staging shape): every
     selected leaf of every page installs in a single dispatch.  ``only``
     restricts to a leaf-index subset (the pallas path's non-kernel
-    leftovers); None = all leaves."""
+    leftovers); None = all leaves.  With ``codec``, the staged pages are
+    codec-ENCODED bytes and each leaf's dequant runs as an epilogue
+    inside the same program (no host hop, no intermediate byte image)."""
     keep = None if only is None else frozenset(only)
 
     def fn(batch_leaves, bufs, rows, slots):
@@ -273,9 +295,13 @@ def _install_jit(layout: PageLayout, buf_shapes: tuple, donate: bool,
             if keep is not None and sp.index not in keep:
                 continue
             for g, pg in enumerate(pages):
-                seg = jax.lax.dynamic_slice(pg, (sp.offset,),
-                                            (sp.nbytes,))
-                val = _bytes_to_leaf(seg, sp)
+                if codec is not None:
+                    val = codec.decode_segment_jnp(
+                        pg, _codec_seg(codec, sp)).reshape(sp.shape)
+                else:
+                    seg = jax.lax.dynamic_slice(pg, (sp.offset,),
+                                                (sp.nbytes,))
+                    val = _bytes_to_leaf(seg, sp)
                 b = out[sp.index]
                 if sp.slot_axis is None:
                     out[sp.index] = jnp.maximum(b, val)
@@ -434,6 +460,20 @@ def _stack_pages(buf_shapes: tuple):
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _decode_stack(codec, buf_shapes: tuple):
+    """Jitted batch decode: encoded staged groups -> a (G, page_bytes)
+    logical byte image, feeding the pallas scatter kernels (the dequant
+    stays device-side; only the scatter itself runs in pallas)."""
+    def fn(bufs, rows):
+        pages = [b if b.ndim == 1
+                 else jax.lax.dynamic_index_in_dim(b, rows[g], 0,
+                                                   keepdims=False)
+                 for g, b in enumerate(bufs)]
+        return jnp.stack([codec.decode_row_jnp(p) for p in pages])
+    return jax.jit(fn)
+
+
 def _pack_group_kernel(*refs, specs, span_lo):
     """Gather one dtype-group's leaves into a contiguous span image:
     all leaf DMAs start up front (each staging buffer is used exactly
@@ -538,7 +578,7 @@ def pack_page(layout: PageLayout, leaves, *, mode: str = "auto",
 def install_pages(layout: PageLayout, batch_leaves, pages, slots, *,
                   mode: str = "auto", n_buffers: int = 2,
                   interpret: Optional[bool] = None,
-                  donate: bool = False):
+                  donate: bool = False, codec=None):
     """Scatter G staged pages into the batch cache leaves at ``slots``.
 
     ``pages``: a (G, page_bytes) uint8 array, or a sequence of
@@ -547,21 +587,49 @@ def install_pages(layout: PageLayout, batch_leaves, pages, slots, *,
     no per-row split ever happens).  Returns the new leaf list in
     tree-flatten order.  ``donate=True`` releases the old batch leaves
     to XLA for in-place update (jit path; callers must drop their own
-    references)."""
+    references).
+
+    ``codec`` (a ``rmem.codec.PageCodec``) declares the staged pages
+    codec-ENCODED (physical bytes, ``codec.encoded_bytes`` wide): the
+    jit path fuses each leaf's dequant into the scatter program as an
+    epilogue; the pallas path dequants in a jitted device pre-pass and
+    scatters the logical image; the ref oracle decodes host-side."""
     mode = _resolve_mode(mode)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     batch_leaves = tuple(batch_leaves)
-    bufs, rows, G = _normalize_pages(layout, pages)
+    width = None
+    if codec is not None:
+        if codec.page_bytes != layout.page_bytes:
+            raise ValueError(f"codec pages {codec.page_bytes}B != "
+                             f"layout {layout.page_bytes}B")
+        for sp in layout.leaves:
+            _codec_seg(codec, sp)
+        width = codec.encoded_bytes
+    bufs, rows, G = _normalize_pages(layout, pages, width)
     if len(slots) != G:
         raise ValueError(f"{len(slots)} slots != {G} pages")
     if mode == "ref":
+        if codec is not None:
+            host_rows = np.asarray(rows)
+            host = np.stack([
+                codec.decode(np.asarray(b if b.ndim == 1
+                                        else b[int(host_rows[g])]))
+                for g, b in enumerate(bufs)])
+            return install_pages_ref(layout, batch_leaves,
+                                     jnp.asarray(host), slots)
         return install_pages_ref(layout, batch_leaves, pages, slots)
     if mode == "pallas":
+        if codec is not None:
+            dec = _decode_stack(codec, tuple(b.shape for b in bufs))(
+                bufs, rows)
+            bufs = tuple(dec[g] for g in range(G))
+            rows = jnp.zeros((G,), jnp.int32)
         return _install_pallas(layout, batch_leaves, bufs, rows, slots,
                                n_buffers, interpret)
     donate = donate and _can_donate(batch_leaves)
-    fn = _install_jit(layout, tuple(b.shape for b in bufs), donate, None)
+    fn = _install_jit(layout, tuple(b.shape for b in bufs), donate, None,
+                      codec)
     return list(fn(batch_leaves, bufs, rows,
                    jnp.asarray(slots, jnp.int32)))
 

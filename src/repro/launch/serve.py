@@ -105,6 +105,13 @@ def _kv_stats_print(pager, access_path) -> dict:
           f"h2c={kv['h2c_bytes']} c2h={kv['c2h_bytes']} "
           f"projected_cold={kv['cold_projected_seconds']*1e3:.2f}ms",
           flush=True)
+    if kv.get("codec") or kv.get("shared_pages"):
+        print(f"[serve:kv-capacity] codec={kv.get('codec')} "
+              f"ratio={kv.get('compression_ratio', 1.0):.2f} "
+              f"cold_logical={kv.get('cold_bytes_logical', 0)} "
+              f"cold_physical={kv.get('cold_bytes_physical', 0)} "
+              f"shared_pages={kv.get('shared_pages', 0)} "
+              f"cow={kv.get('cow_copies', 0)}", flush=True)
     return kv
 
 
@@ -154,6 +161,23 @@ def main(argv=None) -> dict:
                          "group, one D2H per spill); --no-fused-install "
                          "selects the per-leaf reference chain — output "
                          "is bit-exact either way (DESIGN.md §11)")
+    ap.add_argument("--kv-codec", choices=["none", "bf16", "int8"],
+                    default="none",
+                    help="compress KV pages at the tier boundary "
+                         "(implies --kv-paging): bf16 casts float32 "
+                         "leaves (lossless on bf16 caches), int8 "
+                         "quantizes float leaves per-page; decode fuses "
+                         "into the install kernel (DESIGN.md §12)")
+    ap.add_argument("--prefix-share", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="dedup KV pages of requests sharing a prompt "
+                         "prefix against one read-only base page "
+                         "(copy-on-write deltas; implies --kv-paging). "
+                         "Output is bit-exact with sharing off")
+    ap.add_argument("--prefix-share-ratio", type=float, default=0.5,
+                    help="fleet/open-loop path: fraction of each "
+                         "tenant's requests that open with the tenant's "
+                         "shared system prompt")
     ap.add_argument("--kv-node-latency", type=float, default=0.0,
                     help="modeled far-memory link RTT in seconds, paid "
                          "once per doorbell on the verbs path (the "
@@ -247,7 +271,7 @@ def main(argv=None) -> dict:
     # faults imply paging: the plan injects into the memory plane, so
     # a chaos run without one would silently test nothing
     paging = (args.kv_paging or access is not None or kv_shards > 1 or
-              faults_on)
+              faults_on or args.kv_codec != "none" or args.prefix_share)
     if paging and access is None:
         access = "xdma"                 # the old local default
     cfg = get_config(args.arch)
@@ -275,7 +299,9 @@ def main(argv=None) -> dict:
                       overlap=not args.no_overlap,
                       kv_node_latency_s=args.kv_node_latency,
                       kv_retry=retry_policy, kv_integrity=faults_on,
-                      fused_install=args.fused_install)
+                      fused_install=args.fused_install,
+                      kv_codec=args.kv_codec,
+                      prefix_share=args.prefix_share)
     plan = flaps = None
     if faults_on:
         if args.fault_flap is not None:
@@ -293,11 +319,21 @@ def main(argv=None) -> dict:
             timeout_rate=args.fault_timeout_rate,
             corrupt_rate=args.fault_corrupt, flaps=flaps))
     rng = np.random.default_rng(args.seed)
+    # shared-prefix traffic (§12): every request opens with one common
+    # seeded prefix (half the prompt), so the engine dedups their KV
+    # pages against one base.  Off by default — and the default path
+    # draws the exact same prompt bytes as before
+    pfx_len = max(1, args.prompt_len // 2) if args.prefix_share else 0
+    pfx = rng.integers(0, cfg.vocab, size=pfx_len).astype(np.int32) \
+        if pfx_len else None
     t0 = time.time()
     for r in range(args.requests):
-        eng.submit(Request(rid=r, prompt=rng.integers(
-            0, cfg.vocab, size=args.prompt_len).astype(np.int32),
-            max_new=args.max_new))
+        prompt = rng.integers(
+            0, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        if pfx is not None:
+            prompt[:pfx_len] = pfx
+        eng.submit(Request(rid=r, prompt=prompt,
+                           max_new=args.max_new, prefix_len=pfx_len))
     try:
         undrained = eng.run_until_drained()
     finally:
@@ -413,7 +449,8 @@ def _main_fleet(args, cfg, params, access, kv_shards, faults_on,
         kv_doorbell=args.kv_doorbell, overlap=not args.no_overlap,
         kv_node_latency_s=args.kv_node_latency, kv_retry=retry_policy,
         kv_integrity=faults_on, admission_factory=mk_admission,
-        kill_replica_at=kill_at, fused_install=args.fused_install)
+        kill_replica_at=kill_at, fused_install=args.fused_install,
+        kv_codec=args.kv_codec, prefix_share=args.prefix_share)
     plan = None
     if faults_on:
         plan = _faults.install(FaultPlan(
@@ -421,9 +458,12 @@ def _main_fleet(args, cfg, params, access, kv_shards, faults_on,
             timeout_rate=args.fault_timeout_rate,
             corrupt_rate=args.fault_corrupt))
     arrivals = parse_arrivals(args.arrivals or "burst")
-    tenants = default_tenants(args.tenants, args.max_len,
-                              quota_tokens=args.quota_tokens,
-                              slo_ttft_s=slo_s)
+    tenants = default_tenants(
+        args.tenants, args.max_len, quota_tokens=args.quota_tokens,
+        slo_ttft_s=slo_s,
+        system_prompt_len=16 if args.prefix_share else 0,
+        share_ratio=args.prefix_share_ratio if args.prefix_share
+        else 0.0)
     workload = Workload(arrivals, tenants, args.max_len, seed=args.seed)
     pairs = workload.requests(workload.schedule(args.requests),
                               cfg.vocab)

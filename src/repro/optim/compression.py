@@ -8,24 +8,22 @@ Two schemes usable as hooks around the data-parallel gradient reduction
 * ``int8 error-feedback``: per-tensor max-abs int8 quantisation; the
   residual is carried and re-added next step (Seide et al. / EF-SGD), so
   the quantisation bias telescopes to zero over steps.
+
+The int8 quantizer itself lives in ``repro.quant`` (shared with the KV
+page codec in ``rmem/codec.py``); the names below are re-exports.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.quant import dequantize_int8, quantize_int8
 
-def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.float32)
-
-
-def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+__all__ = ["quantize_int8", "dequantize_int8", "EFState", "ef_init",
+           "ef_compress", "ef_decompress", "compress_for_allreduce"]
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,61 @@
+"""Shared int8 quantization primitives (DESIGN.md §12).
+
+One guarded implementation used by both the gradient-compression hooks
+(``optim/compression.py`` re-exports these) and the KV page codec
+(``rmem/codec.py``).  Per-tensor max-abs scaling with a symmetric int8
+grid; the scale computation is hardened against degenerate inputs:
+
+* all-zero tensors quantize to zeros with a *finite* scale (1/127), so
+  dequantization returns exact zeros instead of NaN from a 0/0;
+* NaN/Inf values are sanitized (``nan_to_num``, saturating to half the
+  float32 range) before the max-abs reduction, so the scale is always
+  finite, the int8 payload never carries poisoned lanes, and the
+  dequantized values stay finite too (a full-range saturation would
+  overflow back to Inf in the ``q * scale`` product).
+
+Both a jax and a numpy variant are provided: spill-side page encoding
+runs on host numpy, decode can run either host-side or fused into the
+device install program — the dequant math (``q.astype(f32) * scale``)
+is bit-identical across all three.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# saturation bound for ±Inf: half of float32 max, so the dequant
+# product 127 * (bound / 127) can never round past the finite range
+_F32_SAT = float(np.finfo(np.float32).max) / 2
+
+
+def quantize_int8(x):
+    """Symmetric per-tensor int8 quantization (jax).
+
+    Returns ``(q, scale)`` with ``q`` int8 and ``scale`` a float32
+    scalar; ``scale`` is finite for every input (see module docstring).
+    """
+    xf = jnp.nan_to_num(x.astype(jnp.float32), nan=0.0,
+                        posinf=_F32_SAT, neginf=-_F32_SAT)
+    m = jnp.max(jnp.abs(xf))
+    scale = jnp.where(m > 0, m, 1.0).astype(jnp.float32) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def np_quantize_int8(x: np.ndarray):
+    """Numpy twin of :func:`quantize_int8` (host-side spill encode)."""
+    xf = np.nan_to_num(np.asarray(x).astype(np.float32), nan=0.0,
+                       posinf=_F32_SAT, neginf=-_F32_SAT)
+    m = float(np.max(np.abs(xf))) if xf.size else 0.0
+    scale = np.float32((m if m > 0 else 1.0) / 127.0)
+    q = np.clip(np.round(xf / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def np_dequantize_int8(q: np.ndarray, scale, dtype=np.float32):
+    return (np.asarray(q).astype(np.float32)
+            * np.float32(scale)).astype(dtype)

@@ -13,6 +13,7 @@ Public API:
 """
 from repro.rmem.backend import (LocalHostBackend, PendingIO, RemoteBackend,
                                 TierBackend, make_backend)
+from repro.rmem.codec import PageCodec, Segment, make_codec
 from repro.rmem.node import AddressMap, MapEntry, MemoryNode
 from repro.rmem.store import TieredStore
 from repro.rmem.verbs import (CompletionQueue, MemoryRegion, OpCode,
@@ -24,4 +25,5 @@ __all__ = [
     "MemoryNode", "AddressMap", "MapEntry",
     "TierBackend", "LocalHostBackend", "RemoteBackend", "make_backend",
     "PendingIO", "TieredStore",
+    "PageCodec", "Segment", "make_codec",
 ]

@@ -1,0 +1,249 @@
+"""Per-page codecs for the tier boundary (DESIGN.md §12).
+
+A :class:`PageCodec` maps a *logical* page (the bytes the serving layer
+sees: a concatenation of typed leaf segments, PR-9 ``PageLayout`` order)
+to a *physical* stored representation and back.  Encoding runs host-side
+on the spill path; decoding runs either host-side (single-page reads,
+delta reconstruction) or on device, fused into the install program
+(``kernels/page_install.install_pages(codec=...)``) so inflation hides
+under the already-overlapped fetch/install path.
+
+Formats — the encoded layout is *static*: segment order is preserved and
+every encoded segment has a fixed byte width, so fetch groups stay
+fixed-stride arrays and the install kernel can slice with compile-time
+offsets:
+
+* ``none``  — identity.
+* ``bf16``  — float32 segments cast to bfloat16 (2x); bf16/f16 and
+  non-float segments pass through raw (lossless by construction).
+* ``int8``  — float segments become ``[4-byte f32 max-abs scale][one
+  int8 per element]`` (via ``repro.quant``); non-float raw.
+
+Cross-request prefix sharing stores *deltas* against a shared base page:
+:func:`delta_encode` emits a block bitmap plus only the blocks that
+differ from the base (both sides already codec-encoded), and
+:func:`delta_apply` reconstructs the exact encoded bytes — so sharing is
+bit-transparent no matter the codec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+_FLOAT_NAMES = ("float32", "bfloat16", "float16")
+DELTA_BLOCK = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One typed extent of the logical page (mirrors a layout leaf)."""
+    offset: int
+    nbytes: int
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class EncSeg:
+    """A segment plus its position/format in the encoded page."""
+    offset: int        # logical byte offset
+    nbytes: int        # logical bytes
+    dtype: str         # logical element dtype
+    kind: str          # "raw" | "cast" (f32->bf16) | "quant" (int8+scale)
+    enc_offset: int    # encoded byte offset
+    enc_nbytes: int    # encoded bytes
+
+
+def _seg_kind(name: str, dtype: str, nbytes: int) -> Tuple[str, int]:
+    itemsize = np.dtype(dtype).itemsize
+    if name == "bf16" and dtype == "float32":
+        return "cast", nbytes // 2
+    if name == "int8" and dtype in _FLOAT_NAMES:
+        return "quant", 4 + nbytes // itemsize
+    return "raw", nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PageCodec:
+    """Static logical<->encoded page mapping (hashable: keys jit caches)."""
+    name: str
+    page_bytes: int
+    segs: Tuple[EncSeg, ...]
+
+    @property
+    def encoded_bytes(self) -> int:
+        last = self.segs[-1]
+        return last.enc_offset + last.enc_nbytes
+
+    def seg_at(self, offset: int) -> Optional[EncSeg]:
+        for s in self.segs:
+            if s.offset == offset:
+                return s
+        return None
+
+    # -- host-side (numpy) ------------------------------------------------
+    def encode(self, raw) -> np.ndarray:
+        """Logical page bytes -> encoded bytes (both 1-D uint8)."""
+        from repro.quant import np_quantize_int8
+        raw = np.ascontiguousarray(raw).reshape(-1).view(np.uint8)
+        if raw.nbytes != self.page_bytes:
+            raise ValueError(f"page is {raw.nbytes}B, codec expects "
+                             f"{self.page_bytes}B")
+        out = np.empty((self.encoded_bytes,), np.uint8)
+        for s in self.segs:
+            src = raw[s.offset:s.offset + s.nbytes]
+            dst = out[s.enc_offset:s.enc_offset + s.enc_nbytes]
+            if s.kind == "raw":
+                dst[:] = src
+            elif s.kind == "cast":
+                dst[:] = src.view(np.float32).astype(_BF16).view(np.uint8)
+            else:  # quant
+                q, scale = np_quantize_int8(src.view(np.dtype(s.dtype)))
+                dst[:4] = np.float32(scale).reshape(1).view(np.uint8)
+                dst[4:] = q.view(np.uint8)
+        return out
+
+    def decode(self, enc) -> np.ndarray:
+        """Encoded bytes -> logical page bytes (both 1-D uint8)."""
+        enc = np.ascontiguousarray(enc).reshape(-1).view(np.uint8)
+        enc = enc[:self.encoded_bytes]
+        out = np.empty((self.page_bytes,), np.uint8)
+        for s in self.segs:
+            src = enc[s.enc_offset:s.enc_offset + s.enc_nbytes]
+            dst = out[s.offset:s.offset + s.nbytes]
+            if s.kind == "raw":
+                dst[:] = src
+            elif s.kind == "cast":
+                dst[:] = src.view(_BF16).astype(np.float32).view(np.uint8)
+            else:  # quant
+                scale = src[:4].view(np.float32)[0]
+                deq = (src[4:].view(np.int8).astype(np.float32)
+                       * scale).astype(np.dtype(s.dtype))
+                dst[:] = deq.view(np.uint8)
+        return out
+
+    # -- device-side (traced) ---------------------------------------------
+    def decode_segment_jnp(self, enc_row, seg: EncSeg):
+        """Decode one segment of a traced encoded row to its typed leaf
+        values (1-D, logical element dtype)."""
+        dt = jnp.dtype(seg.dtype)
+        if seg.kind == "raw":
+            by = jax.lax.dynamic_slice(enc_row, (seg.enc_offset,),
+                                       (seg.enc_nbytes,))
+            if dt == jnp.uint8:
+                return by
+            return jax.lax.bitcast_convert_type(
+                by.reshape(-1, dt.itemsize), dt).reshape(-1)
+        if seg.kind == "cast":
+            by = jax.lax.dynamic_slice(enc_row, (seg.enc_offset,),
+                                       (seg.enc_nbytes,))
+            half = jax.lax.bitcast_convert_type(
+                by.reshape(-1, 2), jnp.bfloat16).reshape(-1)
+            return half.astype(jnp.float32)
+        sb = jax.lax.dynamic_slice(enc_row, (seg.enc_offset,), (4,))
+        scale = jax.lax.bitcast_convert_type(
+            sb.reshape(1, 4), jnp.float32)[0]
+        qb = jax.lax.dynamic_slice(enc_row, (seg.enc_offset + 4,),
+                                   (seg.enc_nbytes - 4,))
+        q = jax.lax.bitcast_convert_type(qb, jnp.int8)
+        return (q.astype(jnp.float32) * scale).astype(dt)
+
+    def decode_row_jnp(self, enc_row):
+        """Traced encoded row -> logical byte row (uint8)."""
+        parts = []
+        for s in self.segs:
+            vals = self.decode_segment_jnp(enc_row, s)
+            if vals.dtype == jnp.uint8:
+                parts.append(vals)
+            else:
+                parts.append(jax.lax.bitcast_convert_type(
+                    vals, jnp.uint8).reshape(-1))
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def make_codec(name: Optional[str], page_bytes: int,
+               segments: Optional[Sequence[Segment]] = None,
+               dtype: str = "uint8") -> Optional[PageCodec]:
+    """Build a codec; ``None``/``"none"`` -> no codec (identity tier)."""
+    if name is None or name == "none":
+        return None
+    if name not in ("bf16", "int8"):
+        raise ValueError(f"unknown codec {name!r}")
+    if segments is None:
+        segments = [Segment(0, page_bytes, np.dtype(dtype).name)]
+    segs, enc_off, want = [], 0, 0
+    for sg in sorted(segments, key=lambda s: s.offset):
+        if sg.offset != want:
+            raise ValueError("codec segments must tile the page "
+                             f"contiguously (gap at byte {want})")
+        if sg.nbytes % np.dtype(sg.dtype).itemsize:
+            raise ValueError(f"segment at {sg.offset} is not a whole "
+                             f"number of {sg.dtype} elements")
+        kind, enc_n = _seg_kind(name, np.dtype(sg.dtype).name, sg.nbytes)
+        segs.append(EncSeg(sg.offset, sg.nbytes, np.dtype(sg.dtype).name,
+                           kind, enc_off, enc_n))
+        enc_off += enc_n
+        want = sg.offset + sg.nbytes
+    if want != page_bytes:
+        raise ValueError(f"segments cover {want}B of a {page_bytes}B page")
+    return PageCodec(name, page_bytes, tuple(segs))
+
+
+@functools.lru_cache(maxsize=None)
+def row_decoder(codec: PageCodec, dtype_name: str,
+                page_shape: Tuple[int, ...]):
+    """Jitted ``(staged_group, row) -> typed page``: decodes one encoded
+    row of a device-staged fetch group into the store's page dtype/shape
+    (the lazy-slot device decode; also the non-fused install's source)."""
+    dt = jnp.dtype(dtype_name)
+
+    def fn(group, row):
+        enc = jax.lax.dynamic_index_in_dim(group, row, 0, keepdims=False)
+        by = codec.decode_row_jnp(enc)
+        if dt != jnp.uint8:
+            by = jax.lax.bitcast_convert_type(
+                by.reshape(-1, dt.itemsize), dt).reshape(-1)
+        return by.reshape(page_shape)
+    return jax.jit(fn)
+
+
+# -- block deltas for shared-prefix pages ---------------------------------
+
+def delta_encode(base: np.ndarray, new: np.ndarray,
+                 block: int = DELTA_BLOCK) -> np.ndarray:
+    """Bitmap + changed blocks of ``new`` vs ``base`` (equal-length
+    encoded pages).  Always decodable with :func:`delta_apply` given the
+    base; the caller only stores it when it is actually smaller."""
+    base = np.ascontiguousarray(base).view(np.uint8).reshape(-1)
+    new = np.ascontiguousarray(new).view(np.uint8).reshape(-1)
+    if base.nbytes != new.nbytes:
+        raise ValueError("delta requires equal-length encoded pages")
+    n = new.nbytes
+    nb = (n + block - 1) // block
+    pad = nb * block - n
+    b2 = np.pad(base, (0, pad)).reshape(nb, block)
+    n2 = np.pad(new, (0, pad)).reshape(nb, block)
+    changed = np.any(b2 != n2, axis=1)
+    bitmap = np.packbits(changed)
+    return np.concatenate([bitmap, n2[changed].reshape(-1)])
+
+
+def delta_apply(base: np.ndarray, delta: np.ndarray,
+                block: int = DELTA_BLOCK) -> np.ndarray:
+    base = np.ascontiguousarray(base).view(np.uint8).reshape(-1)
+    delta = np.ascontiguousarray(delta).view(np.uint8).reshape(-1)
+    n = base.nbytes
+    nb = (n + block - 1) // block
+    head = (nb + 7) // 8
+    changed = np.unpackbits(delta[:head])[:nb].astype(bool)
+    pad = nb * block - n
+    out = np.pad(base, (0, pad)).reshape(nb, block).copy()
+    payload = delta[head:head + int(changed.sum()) * block]
+    out[changed] = payload.reshape(-1, block)
+    return out.reshape(-1)[:n]

@@ -43,6 +43,23 @@ writebacks batch into one staged H2C per call group
 (``write_pages``/``update_pages``); ``staged_hops``/
 ``staged_hops_saved`` count the transfers and the per-page hops the
 batching removed.
+
+Capacity multipliers (DESIGN.md §12): an optional per-page **codec**
+(``rmem/codec.py``) splits every page into *logical* bytes (what callers
+see) and *physical* bytes (what the cold tier stores and the fabric
+moves).  Spills encode host-side; fetch groups whose members are plain
+stored pages stage the *encoded* bytes to device (H2C moves physical
+bytes) and decode lazily — either fused into the install program
+(``ensure_packed`` + ``install_pages(codec=...)``) or on first per-slot
+touch.  Checksums stamp and verify the stored representation, so
+integrity never forces a decode round-trip.  On top of that, a store
+can host **shared read-only base pages** (``publish_shared``/
+``store_dedup``): pages deduplicated against a base persist as block
+deltas with refcounts; rewriting a delta page copies it out
+(copy-on-write), and invalidation unmaps the key before any reuse so a
+stale key can never resolve to recycled bytes.  ``capacity_bytes``
+makes the physical footprint a soft budget admission layers can refill
+against (``free_cold_bytes``).
 """
 from __future__ import annotations
 
@@ -58,6 +75,7 @@ from repro.core.engine import MemoryEngine
 from repro.cplane import Completion, as_completed
 from repro.faults.integrity import PageChecksums
 from repro.faults.retry import RetryPolicy, retry_io
+from repro.rmem import codec as codecs
 from repro.rmem.backend import LocalHostBackend, PendingIO, TierBackend
 
 # device-side row extraction for group-staged H2C fills: one compile per
@@ -75,6 +93,9 @@ class TieredStore:
                  backend: Optional[TierBackend] = None,
                  retry: Optional[RetryPolicy] = None,
                  integrity: bool = False,
+                 codec=None, codec_segments=None,
+                 shared_pool: Sequence[int] = (),
+                 capacity_bytes: Optional[int] = None,
                  path=None, **path_kw):
         """``path`` is the `repro.access` spelling of the cold tier: a
         path name (``"xdma"``/``"qdma"``/``"verbs"``/``"auto"``), a
@@ -83,7 +104,15 @@ class TieredStore:
         as the backend directly — and, unless a dedicated ``engine`` is
         passed, the hot-leg staging (H2C/C2H) rides the *same* path, so
         one mechanism owns both hops and one stats() covers them.
-        ``backend=`` remains for bare tier backends."""
+        ``backend=`` remains for bare tier backends.
+
+        ``codec`` names a page codec (``"none"``/``"bf16"``/``"int8"``,
+        or a constructed ``PageCodec``) applied at the tier boundary;
+        ``codec_segments`` optionally gives the page's typed extents
+        (default: one whole-page segment of the store dtype).  The cold
+        tier is sized in *encoded* (physical) bytes.  ``shared_pool``
+        reserves pages as shared read-only bases for ``store_dedup``;
+        ``capacity_bytes`` sets the soft physical-byte budget."""
         if n_hot_slots < 1:
             raise ValueError(n_hot_slots)
         self.n_pages = n_pages
@@ -92,6 +121,16 @@ class TieredStore:
         self._np_dtype = np.dtype(self.dtype.name)
         self.n_hot_slots = min(n_hot_slots, n_pages)
         self.page_bytes = int(np.prod(self.page_shape)) * self.dtype.itemsize
+        if isinstance(codec, str) or codec is None:
+            codec = codecs.make_codec(codec, self.page_bytes,
+                                      codec_segments,
+                                      dtype=self._np_dtype.name)
+        elif codec.page_bytes != self.page_bytes:
+            raise ValueError(f"codec pages are {codec.page_bytes}B, "
+                             f"store pages are {self.page_bytes}B")
+        self.codec: Optional[codecs.PageCodec] = codec
+        self.phys_page_bytes = (codec.encoded_bytes if codec is not None
+                                else self.page_bytes)
         self.path = None
         if path is not None:
             if backend is not None:
@@ -99,7 +138,8 @@ class TieredStore:
             if isinstance(path, str):
                 from repro.access.registry import create_path
                 path = create_path(path, n_pages=n_pages,
-                                   page_bytes=self.page_bytes, **path_kw)
+                                   page_bytes=self.phys_page_bytes,
+                                   **path_kw)
             self.path = path
             backend = path                  # MemoryPath ⊇ TierBackend
             if engine is None:
@@ -109,9 +149,9 @@ class TieredStore:
                             f"(only valid with path=)")
         self.engine = engine or MemoryEngine(n_channels=2)
         self.backend: TierBackend = backend if backend is not None else \
-            LocalHostBackend(n_pages, self.page_bytes)
+            LocalHostBackend(n_pages, self.phys_page_bytes)
         if self.backend.n_pages < n_pages or \
-                self.backend.page_bytes < self.page_bytes:
+                self.backend.page_bytes < self.phys_page_bytes:
             raise ValueError("backend geometry too small for store")
         # fault handling (§9): None/False = the hooks vanish entirely.
         # ``retry`` wraps every cold-tier op (sync and async) in the
@@ -130,6 +170,9 @@ class TieredStore:
         self.slots: List[Optional[jax.Array]] = [None] * self.n_hot_slots
         self._slot_src: List[Optional[Tuple[jax.Array, int]]] = \
             [None] * self.n_hot_slots
+        # _slot_enc[s]: the lazily-held staged row is codec-ENCODED bytes
+        # (physical); decode happens fused in install or on first touch
+        self._slot_enc: List[bool] = [False] * self.n_hot_slots
         self.slot_of_page: Dict[int, int] = {}
         self.page_in_slot: List[Optional[int]] = [None] * self.n_hot_slots
         self._clock = 0
@@ -146,6 +189,29 @@ class TieredStore:
         self.prefetch_hits = 0
         self.staged_hops = 0            # resident-writeback H2C transfers
         self.staged_hops_saved = 0      # per-page hops batching removed
+        # logical-vs-physical accounting (§12)
+        self.capacity_bytes = capacity_bytes
+        self._phys_used: Dict[int, int] = {}    # page -> stored bytes
+        self._phys_total = 0
+        self.spill_bytes_logical = 0
+        self.spill_bytes_physical = 0
+        # shared read-only bases + delta dedup (prefix sharing, §12)
+        self._repr: Dict[int, Tuple] = {}       # page -> ("delta", b, len)
+        for b in shared_pool:
+            if b < 0 or b >= n_pages:
+                raise IndexError(b)
+        self._shared_free: List[int] = list(shared_pool)
+        self._shared_base: Dict = {}            # key -> base page
+        self._base_key: Dict[int, object] = {}  # base page -> key
+        self._base_enc: Dict[int, np.ndarray] = {}
+        self._base_refs: Dict[int, int] = {}
+        self._base_clock: Dict[int, int] = {}
+        self._zombies: set = set()              # invalidated, refs pending
+        self.shared_hits = 0
+        self.shared_misses = 0
+        self.shared_evictions = 0
+        self.cow_copies = 0
+        self.dedup_bytes_saved = 0
 
     # -- cold-tier typed views ------------------------------------------
     def _to_typed(self, raw: np.ndarray) -> np.ndarray:
@@ -153,23 +219,50 @@ class TieredStore:
                                     .reshape(self.page_shape)
 
     # -- fault-wrapped cold-tier ops (§9) --------------------------------
-    def _store_cold(self, page: int, raw: np.ndarray) -> None:
-        """Cold store with checksum stamp + retry.  Full-page stores are
+    def _account_store(self, page: int, nbytes: int) -> None:
+        self._phys_total += nbytes - self._phys_used.pop(page, 0)
+        self._phys_used[page] = nbytes
+
+    def _account_drop(self, page: int) -> None:
+        self._phys_total -= self._phys_used.pop(page, 0)
+
+    def _put_cold(self, page: int, stored: np.ndarray) -> None:
+        """Store the *physical* representation: checksum stamp + retry +
+        byte accounting.  Checksums cover exactly the stored bytes, so a
+        later scrub/verify never decodes.  Full-page stores are
         idempotent (a re-store lands the same bytes), so they retry even
         under the default idempotent-only policy."""
         if self.checksums is not None:
-            self.checksums.stamp(page, raw)
+            self.checksums.stamp(page, stored)
         if self.retry is not None:
-            self.retry.call(lambda: self.backend.store(page, raw),
+            self.retry.call(lambda: self.backend.store(page, stored),
                             op="tier.store", key=f"store:{page}",
                             idempotent=True, source="tier")
         else:
-            self.backend.store(page, raw)
+            self.backend.store(page, stored)
+        self._account_store(page, stored.nbytes)
+        self.spill_bytes_physical += stored.nbytes
 
-    def _load_cold(self, page: int) -> np.ndarray:
-        """Cold load with verify-on-fetch + retry: a checksum mismatch is
-        transient (the next read may be served clean — on a replica or
-        past a flaky DMA), so it rides the same retry loop."""
+    def _store_cold(self, page: int, raw: np.ndarray,
+                    cow: bool = False) -> None:
+        """Cold store of a page's *logical* bytes: encode, then store the
+        physical representation.  A page that previously persisted as a
+        delta against a shared base diverges here — it becomes a
+        standalone page and drops its base ref (``cow=True`` counts it
+        as a copy-on-write divergence)."""
+        if page in self._base_key:
+            raise ValueError(f"page {page} is a shared read-only base")
+        self._drop_repr(page, cow=cow)
+        raw = np.ascontiguousarray(raw).reshape(-1).view(np.uint8)
+        stored = self.codec.encode(raw) if self.codec is not None else raw
+        self._put_cold(page, stored)
+        self.spill_bytes_logical += self.page_bytes
+
+    def _load_stored(self, page: int) -> np.ndarray:
+        """Cold load of the stored (physical) bytes with verify-on-fetch
+        + retry: a checksum mismatch is transient (the next read may be
+        served clean — on a replica or past a flaky DMA), so it rides
+        the same retry loop."""
         def attempt():
             raw = self.backend.load(page)
             if self.checksums is not None:
@@ -179,6 +272,24 @@ class TieredStore:
             return self.retry.call(attempt, op="tier.load",
                                    key=f"load:{page}", source="tier")
         return attempt()
+
+    def _decode_stored(self, page: int, stored: np.ndarray) -> np.ndarray:
+        """Stored (physical) bytes -> logical page bytes: delta pages
+        reconstruct against their base's cached encoded image first,
+        then the codec inflates."""
+        stored = np.asarray(stored).reshape(-1).view(np.uint8)
+        rep = self._repr.get(page)
+        if rep is not None:
+            enc = codecs.delta_apply(self._base_enc[rep[1]],
+                                     stored[:rep[2]])
+        else:
+            enc = stored[:self.phys_page_bytes]
+        if self.codec is not None:
+            return self.codec.decode(enc)
+        return enc[:self.page_bytes]
+
+    def _load_cold(self, page: int) -> np.ndarray:
+        return self._decode_stored(page, self._load_stored(page))
 
     def _load_many_async(self, group: Sequence[int]) -> PendingIO:
         """Batched cold load, retry-wrapped when a policy is set.  The
@@ -192,7 +303,7 @@ class TieredStore:
                         op="tier.load_many",
                         key=f"load_many:{group[0] if group else -1}",
                         source="tier",
-                        nbytes=len(group) * self.page_bytes)
+                        nbytes=len(group) * self.phys_page_bytes)
 
     def _wait_verified(self, io: PendingIO, group_pages: Sequence[int],
                        rows: Sequence[int]):
@@ -212,17 +323,32 @@ class TieredStore:
                             pages=[p for _, p in bad], layer="tier")
             raw = np.array(raw, copy=True)  # gather rows may be shared
             for k, p in bad:
-                raw[k] = self._load_cold(p)
+                got = self._load_stored(p)
+                raw[k, :got.shape[-1]] = got
         return raw
 
     def _slot_array(self, s: int) -> Optional[jax.Array]:
         """The slot's device array, materializing a lazily-held staged
-        group row on first per-slot touch."""
+        group row on first per-slot touch (decoding device-side if the
+        row landed codec-encoded)."""
         src = self._slot_src[s]
         if src is not None:
-            self.slots[s] = _device_row(src[0], src[1])
+            if self._slot_enc[s]:
+                dec = codecs.row_decoder(self.codec, self._np_dtype.name,
+                                         self.page_shape)
+                self.slots[s] = dec(src[0], src[1])
+                self._slot_enc[s] = False
+            else:
+                self.slots[s] = _device_row(src[0], src[1])
             self._slot_src[s] = None
         return self.slots[s]
+
+    def staged_encoded(self, page: int) -> bool:
+        """True when ``page``'s resident slot currently holds the codec-
+        encoded staged row (``ensure_packed`` callers split such pages
+        into the installer's fused-dequant group)."""
+        s = self.slot_of_page.get(page)
+        return s is not None and self._slot_enc[s]
 
     def read_page(self, page: int) -> np.ndarray:
         """Cold-tier view of a page (host copy, typed).  If the page is
@@ -251,12 +377,14 @@ class TieredStore:
             s = self.slot_of_page[page]
             self.slots[s] = self.engine.write(arr).wait()
             self._slot_src[s] = None
+            self._slot_enc[s] = False
             return
         dev = self.engine.write(np.stack([a for _, a in items])).wait()
         for k, (page, _) in enumerate(items):
             s = self.slot_of_page[page]
             self.slots[s] = None
             self._slot_src[s] = (dev, k)
+            self._slot_enc[s] = False
         self.staged_hops_saved += len(items) - 1
 
     def write_page(self, page: int, value) -> None:
@@ -289,7 +417,10 @@ class TieredStore:
                 except Exception:
                     pass                    # discarded fetch; store decides
         for page, arr in items:
-            self._store_cold(page, arr.reshape(-1).view(np.uint8))
+            # overwriting a page that persisted as a shared-base delta is
+            # a divergence: it copies out to a standalone page (COW)
+            self._store_cold(page, arr.reshape(-1).view(np.uint8),
+                             cow=True)
             self._dirty.discard(page)
         self._stage_resident([(p, a) for p, a in items
                               if p in self.slot_of_page])
@@ -338,7 +469,8 @@ class TieredStore:
                 host = np.asarray(
                     self.engine.read(self._slot_array(s)).wait())
                 self.c2h_bytes += self.page_bytes
-                self._store_cold(old, host.reshape(-1).view(np.uint8))
+                self._store_cold(old, host.reshape(-1).view(np.uint8),
+                                 cow=True)
                 self._dirty.discard(old)
             else:
                 # clean page: the cold copy is already identical — skip the
@@ -348,6 +480,7 @@ class TieredStore:
             del self.slot_of_page[old]
         self.page_in_slot[s] = None
         self._slot_src[s] = None
+        self._slot_enc[s] = False
         return s
 
     def _fetch_depth(self, n_missing: int) -> int:
@@ -522,20 +655,47 @@ class TieredStore:
                     self.page_in_slot[s] = p
                     self.slot_of_page[p] = s
                     self._dirty.discard(p)  # fresh from cold: clean
+                deltas = any(p in self._repr for p in group_pages)
+                if self.codec is not None and not deltas:
+                    # stage the ENCODED group: H2C moves physical bytes,
+                    # decode fuses into install (or first per-slot touch)
+                    sel = raw if rows == list(range(len(raw))) else \
+                        raw[np.asarray(rows)]
+                    sel = np.ascontiguousarray(
+                        sel[:, :self.phys_page_bytes]).view(np.uint8)
+                    pending.append((slots_g, self.engine.write(sel), True))
+                    continue
                 if len(group_pages) == 1:
-                    typed = self._to_typed(raw[rows[0]])
+                    typed = self._to_typed(self._decode_stored(
+                        group_pages[0], raw[rows[0]])) if deltas \
+                        else self._to_typed(raw[rows[0]])
+                elif deltas:
+                    mats = np.stack([
+                        self._decode_stored(p, raw[k])
+                        for k, p in zip(rows, group_pages)])
+                    typed = mats.view(self._np_dtype).reshape(
+                        (len(group_pages),) + self.page_shape)
                 else:
                     sel = raw if rows == list(range(len(raw))) else \
                         raw[np.asarray(rows)]
                     sel = np.ascontiguousarray(sel[:, :self.page_bytes])
                     typed = sel.view(self._np_dtype).reshape(
                         (len(group_pages),) + self.page_shape)
-                pending.append((slots_g, self.engine.write(typed)))
-            for slots_g, tr in pending:
+                pending.append((slots_g, self.engine.write(typed), False))
+            for slots_g, tr, enc in pending:
                 dev = tr.wait()
+                if enc:
+                    for k, s in enumerate(slots_g):
+                        self.slots[s] = None
+                        self._slot_src[s] = (dev, k)
+                        self._slot_enc[s] = True
+                    self.h2c_bytes += self.phys_page_bytes * len(slots_g)
+                    installed.update(slots_g)
+                    continue
                 if len(slots_g) == 1:
                     self.slots[slots_g[0]] = dev
                     self._slot_src[slots_g[0]] = None
+                    self._slot_enc[slots_g[0]] = False
                 else:
                     # keep the staged group whole: each slot remembers its
                     # (group, row) source and only splits on first per-slot
@@ -544,6 +704,7 @@ class TieredStore:
                     for k, s in enumerate(slots_g):
                         self.slots[s] = None
                         self._slot_src[s] = (dev, k)
+                        self._slot_enc[s] = False
                 installed.update(slots_g)
                 self.h2c_bytes += self.page_bytes * len(slots_g)
         except BaseException:
@@ -556,6 +717,7 @@ class TieredStore:
                     self.page_in_slot[s] = None
                     self.slots[s] = None
                     self._slot_src[s] = None
+                    self._slot_enc[s] = False
                     self._last_use[s] = 0
             raise
         if missing and obs.trace.enabled():
@@ -580,12 +742,172 @@ class TieredStore:
         if writeback is not False and page in self._dirty:
             host = np.asarray(self.engine.read(self._slot_array(s)).wait())
             self.c2h_bytes += self.page_bytes
-            self._store_cold(page, host.reshape(-1).view(np.uint8))
+            self._store_cold(page, host.reshape(-1).view(np.uint8),
+                             cow=True)
         self._dirty.discard(page)
         self.page_in_slot[s] = None
         self.slots[s] = None
         self._slot_src[s] = None
+        self._slot_enc[s] = False
         self._last_use[s] = 0
+
+    # -- shared read-only bases + delta dedup (prefix sharing, §12) ------
+    def _drop_repr(self, page: int, cow: bool = False) -> None:
+        rep = self._repr.pop(page, None)
+        if rep is not None:
+            self._unref_base(rep[1])
+            if cow:
+                self.cow_copies += 1
+
+    def _unref_base(self, b: int) -> None:
+        self._base_refs[b] = self._base_refs.get(b, 1) - 1
+        if self._base_refs[b] <= 0 and b in self._zombies:
+            self._free_base_storage(b)
+
+    def _free_base_storage(self, b: int) -> None:
+        self._base_enc.pop(b, None)
+        self._base_refs.pop(b, None)
+        self._base_clock.pop(b, None)
+        self._zombies.discard(b)
+        if self.checksums is not None:
+            self.checksums.drop(b)
+        self._account_drop(b)
+        self._shared_free.append(b)
+
+    def lookup_shared(self, key) -> Optional[int]:
+        """The live base page for ``key`` (None if never published or
+        invalidated) — admission layers use this to predict whether a
+        request's spill will dedup."""
+        return self._shared_base.get(key)
+
+    def publish_shared(self, key, value, *, encoded: bool = False
+                       ) -> Optional[int]:
+        """Publish ``value`` (logical page bytes, or the already-encoded
+        physical image with ``encoded=True``) as the shared read-only
+        base for ``key``.  Returns the base page, or None when the pool
+        is exhausted and every base is still referenced."""
+        if key in self._shared_base:
+            self.invalidate_shared(key)
+        if not self._shared_free:
+            # recycle the LRU unreferenced base.  Unmap its key FIRST
+            # (the gpt-neox MemoryStore EOD idiom: invalidate before
+            # reuse, so a stale key can never resolve to recycled bytes).
+            cand = [p for p, k in self._base_key.items()
+                    if self._base_refs.get(p, 0) <= 0]
+            if not cand:
+                return None
+            victim = min(cand, key=lambda p: self._base_clock.get(p, 0))
+            self.invalidate_shared(self._base_key[victim])
+            self.shared_evictions += 1
+        b = self._shared_free.pop()
+        if encoded:
+            enc = np.ascontiguousarray(value).reshape(-1).view(np.uint8)
+        elif self.codec is not None:
+            enc = self.codec.encode(value)
+        else:
+            enc = np.array(np.ascontiguousarray(value).reshape(-1)
+                           .view(np.uint8)[:self.page_bytes], copy=True)
+        self._put_cold(b, enc)
+        self._base_enc[b] = enc
+        self._base_refs[b] = 0
+        self._clock += 1
+        self._base_clock[b] = self._clock
+        self._base_key[b] = key
+        self._shared_base[key] = b
+        return b
+
+    def invalidate_shared(self, key) -> None:
+        """Unmap ``key``'s base.  Storage frees immediately when no delta
+        page references it; otherwise the base lingers as an unmapped
+        zombie (in-flight consumers stay correct) and frees when the
+        last reference drains."""
+        b = self._shared_base.pop(key, None)
+        if b is None:
+            return
+        self._base_key.pop(b, None)
+        if self._base_refs.get(b, 0) <= 0:
+            self._free_base_storage(b)
+        else:
+            self._zombies.add(b)
+
+    def store_dedup(self, page: int, value, key) -> float:
+        """Store ``page`` deduplicated against the shared base for
+        ``key``: first writer publishes the base, later writers persist
+        only the block delta of their encoded bytes (refcounted;
+        reconstruction is bit-exact).  Falls back to a standalone store
+        when no base can be placed or the delta does not shrink.
+        Returns the physical/encoded size ratio actually stored."""
+        if page < 0 or page >= self.n_pages:
+            raise IndexError(page)
+        arr = np.asarray(value, self._np_dtype).reshape(self.page_shape)
+        raw = arr.reshape(-1).view(np.uint8)
+        stale = self._prefetch.pop(page, None)
+        if stale is not None:
+            try:
+                stale[0].wait()
+            except Exception:
+                pass
+        enc = self.codec.encode(raw) if self.codec is not None else \
+            np.array(raw, copy=True)
+        b = self._shared_base.get(key)
+        if b is None:
+            self.shared_misses += 1
+            b = self.publish_shared(key, enc, encoded=True)
+        else:
+            self.shared_hits += 1
+            self._clock += 1
+            self._base_clock[b] = self._clock
+        ratio = 1.0
+        if b is not None:
+            delta = codecs.delta_encode(self._base_enc[b], enc)
+            if delta.nbytes < enc.nbytes:
+                self._drop_repr(page)
+                self._put_cold(page, delta)
+                self.spill_bytes_logical += self.page_bytes
+                self._repr[page] = ("delta", b, delta.nbytes)
+                self._base_refs[b] = self._base_refs.get(b, 0) + 1
+                self.dedup_bytes_saved += enc.nbytes - delta.nbytes
+                ratio = delta.nbytes / max(enc.nbytes, 1)
+            else:
+                self._drop_repr(page)
+                self._put_cold(page, enc)
+                self.spill_bytes_logical += self.page_bytes
+        else:
+            self._drop_repr(page)
+            self._put_cold(page, enc)
+            self.spill_bytes_logical += self.page_bytes
+        self._dirty.discard(page)
+        if page in self.slot_of_page:
+            self._stage_resident([(page, arr)])
+        return ratio
+
+    def discard_cold(self, page: int) -> None:
+        """Forget a page's cold bytes: accounting, checksum, and any
+        delta linkage (the base ref drops; a zombie base with no
+        remaining refs frees).  The soft-capacity release a serving
+        layer calls when a request retires; backend bytes stay in place
+        until the next occupant overwrites them."""
+        if page in self._base_key:
+            raise ValueError(f"page {page} is a shared base; use "
+                             f"invalidate_shared")
+        self._drop_repr(page)
+        if self.checksums is not None:
+            self.checksums.drop(page)
+        self._account_drop(page)
+
+    def free_cold_bytes(self) -> Optional[int]:
+        """Remaining physical-byte budget (None when uncapped)."""
+        if self.capacity_bytes is None:
+            return None
+        return max(0, self.capacity_bytes - self._phys_total)
+
+    @property
+    def cold_bytes_physical(self) -> int:
+        return self._phys_total
+
+    @property
+    def cold_bytes_logical(self) -> int:
+        return len(self._phys_used) * self.page_bytes
 
     @property
     def resident_pages(self):
@@ -605,17 +927,35 @@ class TieredStore:
         load_ops = cold.get("load_ops", 0)
         load_batches = cold.get("load_batches", 0)
         avg_load_batch = load_ops / load_batches if load_batches else 1.0
+        # projections rate the *physical* (stored/wire) page size, so
+        # path-selection cost models see compressed wire bytes
         projected = (
-            self.backend.projected_seconds(self.page_bytes, batch)
+            self.backend.projected_seconds(self.phys_page_bytes, batch)
             * cold.get("store_ops", 0)
-            + self.backend.projected_seconds(self.page_bytes,
+            + self.backend.projected_seconds(self.phys_page_bytes,
                                              max(avg_load_batch, 1.0))
             * load_ops)
+        phys = self.cold_bytes_physical
+        logical = self.cold_bytes_logical
         return obs.export_stats("tier", {
             "h2c_bytes": self.h2c_bytes, "c2h_bytes": self.c2h_bytes,
-            "page_bytes": self.page_bytes, "cold": cold,
+            "page_bytes": self.page_bytes,
+            "phys_page_bytes": self.phys_page_bytes,
+            "codec": self.codec.name if self.codec is not None else "none",
+            "cold": cold,
             "cold_bytes_moved": moved,
             "cold_projected_seconds": projected,
+            "cold_bytes_logical": logical,
+            "cold_bytes_physical": phys,
+            "compression_ratio": logical / phys if phys else 1.0,
+            "spill_bytes_logical": self.spill_bytes_logical,
+            "spill_bytes_physical": self.spill_bytes_physical,
+            "shared_pages": len(self._shared_base),
+            "shared_hits": self.shared_hits,
+            "shared_misses": self.shared_misses,
+            "shared_evictions": self.shared_evictions,
+            "cow_copies": self.cow_copies,
+            "dedup_bytes_saved": self.dedup_bytes_saved,
             "evictions": self.evictions,
             "clean_evictions": self.clean_evictions,
             "dirty_evictions": self.evictions - self.clean_evictions,

@@ -129,15 +129,26 @@ class AdmissionController:
         return self.quotas.get(tenant, self.default_quota)
 
     # -- the per-step decision --------------------------------------------
-    def select(self, free_slots: int, kv_free: int, batch_slots: int
+    def select(self, free_slots: int, kv_free: int, batch_slots: int,
+               kv_cost=None
                ) -> Tuple[List[Request], List[Tuple[Request, str]]]:
         """Decide this step's admissions.  Returns ``(admits, sheds)``:
         requests to start now (at most ``min(free_slots, kv_free)``) and
         requests to fail with a reason.  Everything else stays queued.
+
+        ``kv_cost`` (optional callable ``req -> float``) is the
+        *effective* KV page cost of admitting a request: 1.0 for a
+        standalone page, a fraction for requests whose spill will dedup
+        against a published shared prefix.  ``kv_free`` then acts as a
+        fractional page budget — the shared-prefix admission fast path
+        that multiplies concurrency at fixed fabric size (DESIGN.md
+        §12).  With ``kv_cost=None`` every request costs one page and
+        the decision is exactly the legacy ``min(free_slots, kv_free)``.
         """
         admits: List[Request] = []
         sheds: List[Tuple[Request, str]] = []
-        capacity = min(free_slots, kv_free)
+        kv_budget = float(kv_free)
+        kv_used = 0.0
         keep: List[Request] = []
         position = 0            # queue rank among not-yet-shed requests
         for req in self.backlog:
@@ -159,7 +170,10 @@ class AdmissionController:
                                        f"{deadline:.3f}s"))
                     self.shed_slo += 1
                     continue
-            if len(admits) < capacity:
+            cost_kv = 1.0 if kv_cost is None \
+                else max(0.0, float(kv_cost(req)))
+            if len(admits) < free_slots and \
+                    kv_used + cost_kv <= kv_budget + 1e-9:
                 over = quota is not None and \
                     self.inflight.get(req.tenant, 0) + cost > quota
                 if over:
@@ -170,6 +184,7 @@ class AdmissionController:
                     position += 1
                     continue
                 admits.append(req)
+                kv_used += cost_kv
                 self.inflight[req.tenant] = \
                     self.inflight.get(req.tenant, 0) + cost
                 self.peak_inflight[req.tenant] = max(

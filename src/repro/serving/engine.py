@@ -91,6 +91,11 @@ class Request:
     priority: int = 0
     deadline_s: Optional[float] = None
     t_arrival: float = 0.0             # open-loop arrival time (virtual)
+    # shared-prefix length (DESIGN.md §12): the first prefix_len prompt
+    # tokens are a cross-request prefix (system prompt / template); a
+    # paging engine with prefix_share=True dedups the slot's spilled
+    # page against the shared base keyed by those tokens' bytes
+    prefix_len: int = 0
     # monotonic lifecycle clocks (perf_counter, one coherent pair):
     # submit -> admit is queue wait, submit -> first token is TTFT,
     # first -> done over the remaining tokens is TPOT, submit -> done
@@ -150,6 +155,24 @@ def page_bytes_for(cfg, max_len: int) -> int:
     return sum(l.nbytes for l in jax.tree.leaves(template))
 
 
+def page_codec_for(cfg, max_len: int, codec: Optional[str]):
+    """The engine's page codec (DESIGN.md §12): the PR-9 ``PageLayout``
+    already knows every leaf's byte extent and dtype inside the packed
+    page, so its leaves become the codec's typed segments — float KV
+    leaves compress, integer counters pass through raw, and the same
+    object keys the fused install's dequant epilogue.  ``None`` for
+    ``codec in (None, "none")``."""
+    if codec is None or codec == "none":
+        return None
+    from repro.rmem import codec as codecs
+    single = jax.eval_shape(lambda: T.init_cache(cfg, 1, max_len))
+    batch = jax.eval_shape(lambda: T.init_cache(cfg, 2, max_len))
+    layout = ops.page_layout(single, batch, 2)
+    segs = [codecs.Segment(sp.offset, sp.nbytes, sp.dtype)
+            for sp in layout.leaves if sp.nbytes]
+    return codecs.make_codec(codec, layout.page_bytes, segs)
+
+
 class ServeEngine:
     def __init__(self, cfg, params, batch_slots: int = 4,
                  max_len: int = 256, access_path: Optional[str] = None,
@@ -165,6 +188,11 @@ class ServeEngine:
                  shared_path=None, page_base: int = 0,
                  total_pages: Optional[int] = None,
                  fused_install: bool = True,
+                 kv_codec: str = "none",
+                 prefix_share: bool = False,
+                 prefix_pages: int = 8,
+                 prefix_base: Optional[int] = None,
+                 kv_capacity_bytes: Optional[int] = None,
                  name: str = "engine0"):
         if kv_backend is not None:
             warnings.warn(
@@ -241,6 +269,16 @@ class ServeEngine:
         # per-leaf slice/.at[].set chain — bit-exact either way
         self.fused_install = fused_install
         self._layout = None             # PageLayout, built lazily
+        # capacity multipliers (DESIGN.md §12): the tier-boundary codec
+        # and cross-request prefix sharing.  Both default off; the
+        # default-off paths are byte-compatible with the PR-9 engine.
+        self.kv_codec = kv_codec
+        self.prefix_share = prefix_share
+        self.prefix_pages = prefix_pages if prefix_share else 0
+        # EWMA of the delta/encoded size ratio store_dedup actually
+        # achieved — the admission-layer estimate of a shared request's
+        # effective page cost (prior 0.5 until the first sample lands)
+        self._share_ratio = 0.5
         self.install_fused = 0          # slots installed via the kernel
         self.install_fallback = 0       # ... vs the per-leaf chain
         self.install_hops_saved = 0     # per-leaf D2H readbacks avoided
@@ -281,6 +319,14 @@ class ServeEngine:
                 total_pages = page_base + batch_slots
             page_bytes = page_bytes_for(cfg, max_len)
             self._cache_template = None
+            pool = ()
+            if prefix_share:
+                if prefix_base is None:
+                    raise ValueError(
+                        "prefix_share over a shared plane needs "
+                        "prefix_base= (the fleet sizes the base pool "
+                        "past every replica's page range)")
+                pool = range(prefix_base, prefix_base + prefix_pages)
             # the path is the fleet's: one retry/integrity plane lives
             # inside it (ShardedPath) or above it at the tier, exactly
             # like the self-built case below
@@ -290,11 +336,21 @@ class ServeEngine:
                 n_pages=total_pages, page_shape=(page_bytes,),
                 dtype="uint8", n_hot_slots=batch_slots, path=shared_path,
                 retry=None if fabric_owned else kv_retry,
-                integrity=kv_integrity)
+                integrity=kv_integrity,
+                codec=page_codec_for(cfg, max_len, kv_codec),
+                shared_pool=pool, capacity_bytes=kv_capacity_bytes)
         elif access_path is not None:
             self._cache_template = T.init_cache(cfg, 1, max_len)
             page_bytes = sum(l.nbytes
                              for l in jax.tree.leaves(self._cache_template))
+            codec_obj = page_codec_for(cfg, max_len, kv_codec)
+            # the cold tier is sized in *physical* (encoded) bytes: the
+            # codec's compression is real fabric capacity, and the
+            # byte-accurate path model rates transfers at what actually
+            # moves (DESIGN.md §12)
+            phys_bytes = codec_obj.encoded_bytes if codec_obj is not None \
+                else page_bytes
+            n_tier_pages = batch_slots + self.prefix_pages
             if kv_shards > 1:
                 # the sharded memory plane: N member paths (each a full
                 # access path) behind one consistent-hash ShardedPath —
@@ -302,8 +358,8 @@ class ServeEngine:
                 from repro.fabric import FabricManager
                 apath = create_path(
                     "fabric", member=access_path, shards=kv_shards,
-                    replicas=kv_replicas, n_pages=batch_slots,
-                    page_bytes=page_bytes, n_channels=2, n_nodes=1,
+                    replicas=kv_replicas, n_pages=n_tier_pages,
+                    page_bytes=phys_bytes, n_channels=2, n_nodes=1,
                     doorbell_batch=kv_doorbell,
                     node_latency_s=kv_node_latency_s,
                     retry=kv_retry, integrity=kv_integrity)
@@ -311,8 +367,8 @@ class ServeEngine:
                 self.fabric_mgr = FabricManager(apath)
             else:
                 # registry factories drop kwargs their path doesn't take
-                apath = create_path(access_path, n_pages=batch_slots,
-                                    page_bytes=page_bytes, n_channels=2,
+                apath = create_path(access_path, n_pages=n_tier_pages,
+                                    page_bytes=phys_bytes, n_channels=2,
                                     n_nodes=1,
                                     doorbell_batch=kv_doorbell,
                                     node_latency_s=kv_node_latency_s)
@@ -320,10 +376,14 @@ class ServeEngine:
             # failing over) internally, a tier-level policy on top would
             # multiply attempts for ops the fabric already gave up on
             self.pager = TieredStore(
-                n_pages=batch_slots, page_shape=(page_bytes,), dtype="uint8",
+                n_pages=n_tier_pages, page_shape=(page_bytes,),
+                dtype="uint8",
                 n_hot_slots=batch_slots, path=apath,
                 retry=kv_retry if self.fabric is None else None,
-                integrity=kv_integrity)
+                integrity=kv_integrity, codec=codec_obj,
+                shared_pool=range(batch_slots,
+                                  batch_slots + self.prefix_pages),
+                capacity_bytes=kv_capacity_bytes)
 
     # -- page-range partitioning over a shared plane ---------------------
     def _pg(self, slot: int) -> int:
@@ -367,7 +427,29 @@ class ServeEngine:
             if p in self.pager.slot_of_page or p in self.pager._prefetch:
                 continue
             free += 1
+        byte_free = self.pager.free_cold_bytes()
+        if byte_free is not None:
+            # soft physical-byte budget (§12): admission refills against
+            # *effective* capacity — compressed/deduped pages leave more
+            # budget than their logical size suggests
+            free = min(free, byte_free // max(self.pager.phys_page_bytes,
+                                              1))
         return free
+
+    def kv_page_cost(self, req: Request) -> float:
+        """Effective KV page cost of admitting ``req`` (the admission
+        controller's ``kv_cost`` hook): 1.0 for a standalone page; for a
+        shared-prefix request whose base is already published, the EWMA
+        of the delta/encoded ratio ``store_dedup`` has been achieving —
+        so a half-shared workload admits ~2x the requests per unit of
+        fabric budget."""
+        if self.pager is None or not self.prefix_share or \
+                req.prefix_len <= 0:
+            return 1.0
+        key = req.prompt[:req.prefix_len].tobytes()
+        if self.pager.lookup_shared(key) is None:
+            return 1.0          # first writer publishes a full base
+        return self._share_ratio
 
     def _install_layout(self):
         """The engine's ``PageLayout`` (DESIGN.md §11), built once per
@@ -414,7 +496,7 @@ class ServeEngine:
             out.append(b.at[tuple(idx)].set(o[tuple(src_idx)]))
         self.caches = jax.tree.unflatten(treedef, out)
 
-    def _page_store(self, slot: int, leaves) -> None:
+    def _page_store(self, slot: int, req: Request, leaves) -> None:
         """Pack a slot's prefilled cache to one byte page, spill it to the
         cold tier, and queue its *prefetch* — the whole admission round's
         fetches are issued in one batched call from ``_admit``, and the
@@ -433,7 +515,16 @@ class ServeEngine:
         else:
             packed = np.concatenate(
                 [np.asarray(l).reshape(-1).view(np.uint8) for l in leaves])
-        self.pager.write_page(self._pg(slot), packed)
+        if self.prefix_share and req.prefix_len > 0:
+            # dedup the spill against the shared base for this prompt
+            # prefix (§12): first writer publishes, later writers store
+            # only the block delta — bit-exact reconstruction, so tokens
+            # are invariant to sharing being on
+            key = req.prompt[:req.prefix_len].tobytes()
+            ratio = self.pager.store_dedup(self._pg(slot), packed, key)
+            self._share_ratio += 0.5 * (ratio - self._share_ratio)
+        else:
+            self.pager.write_page(self._pg(slot), packed)
         self._admit_spills.append(self._pg(slot))
 
     def _flush_spill_prefetch(self) -> None:
@@ -494,7 +585,7 @@ class ServeEngine:
             if self.pager is not None:
                 leaves, treedef = jax.tree.flatten(caches1)
                 try:
-                    self._page_store(s, leaves)
+                    self._page_store(s, req, leaves)
                 except RETRIABLE as e:
                     self._shed(req, f"kv page store failed: {e}",
                                slot=s)
@@ -558,7 +649,9 @@ class ServeEngine:
             self.admission.enqueue(cand)
         admits, sheds = self.admission.select(
             free_slots=len(free), kv_free=self.kv_free_pages(),
-            batch_slots=self.B)
+            batch_slots=self.B,
+            kv_cost=self.kv_page_cost
+            if (self.pager is not None and self.prefix_share) else None)
         for req, reason in sheds:
             self._shed(req, reason)
         for s, req in zip(free, admits):
@@ -612,6 +705,10 @@ class ServeEngine:
                 self.pager.release(self._pg(slot), writeback=False)
             except Exception:
                 pass        # the page is being abandoned either way
+            try:
+                self.pager.discard_cold(self._pg(slot))
+            except Exception:
+                pass
         if obs.trace.enabled():
             obs.instant("serve.shed", rid=req.rid, reason=reason,
                         tenant=req.tenant)
@@ -710,14 +807,25 @@ class ServeEngine:
             for s in ready:
                 self._install_one(s)
             return
-        entries = [packed[self._pg(s)] for s in ready]
         meta = [self._pending_install.pop(s) for s in ready]
+        # split by staged representation: encoded groups carry the
+        # codec's physical bytes to device (the H2C already moved fewer
+        # bytes) and install through the dequant epilogue; raw groups
+        # (codec off, or delta pages materialized host-side) install
+        # through the byte-identical PR-9 program
+        enc = [s for s in ready if self.pager.staged_encoded(self._pg(s))]
+        raw = [s for s in ready if s not in enc]
         with obs.span("serve.install", path="fused", slots=len(ready),
                       rids=[m[0].rid for m in meta]):
             flat_b, treedef = jax.tree.flatten(self.caches)
-            out = ops.install_pages(self._install_layout(), flat_b,
-                                    entries, ready, donate=True)
-            self.caches = jax.tree.unflatten(treedef, out)
+            for group, codec in ((raw, None), (enc, self.pager.codec)):
+                if not group:
+                    continue
+                entries = [packed[self._pg(s)] for s in group]
+                flat_b = ops.install_pages(self._install_layout(), flat_b,
+                                           entries, group, donate=True,
+                                           codec=codec)
+            self.caches = jax.tree.unflatten(treedef, flat_b)
         self.install_fused += len(ready)
         if obs.metrics.live():
             obs.default_registry().counter(
@@ -815,6 +923,10 @@ class ServeEngine:
                 self.slot_req[s] = None
                 if self.pager is not None:
                     self.pager.release(self._pg(s))
+                    # the retiring request's cold bytes return to the
+                    # soft budget (and its delta's base ref drops) —
+                    # what admission's refill draws against (§12)
+                    self.pager.discard_cold(self._pg(s))
             else:
                 self.cur_tokens[s, 0] = tok
         return len(active)

@@ -38,7 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import obs
 from repro.serving.engine import (Request, ServeEngine, page_bytes_for,
-                                  summarize_requests)
+                                  page_codec_for, summarize_requests)
 
 
 class FleetRouter:
@@ -332,7 +332,10 @@ class FleetRouter:
               kv_integrity: bool = False, admission_factory=None,
               kill_replica_at: Optional[Tuple[int, str]] = None,
               affinity_slack_tokens: int = 64,
-              fused_install: bool = True) -> "FleetRouter":
+              fused_install: bool = True,
+              kv_codec: str = "none",
+              prefix_share: bool = False, prefix_pages: int = 8,
+              kv_capacity_bytes: Optional[int] = None) -> "FleetRouter":
         """Build N replicas over one memory plane.
 
         ``replicas == 1`` degrades to the legacy single-engine shape:
@@ -359,23 +362,33 @@ class FleetRouter:
                 overlap_grace_s=overlap_grace_s,
                 kv_node_latency_s=kv_node_latency_s, kv_retry=kv_retry,
                 kv_integrity=kv_integrity, admission=mk_adm(),
-                fused_install=fused_install, name="replica0")
+                fused_install=fused_install, kv_codec=kv_codec,
+                prefix_share=prefix_share, prefix_pages=prefix_pages,
+                kv_capacity_bytes=kv_capacity_bytes, name="replica0")
             return cls([eng], kill_replica_at=None,
                        affinity_slack_tokens=affinity_slack_tokens)
         paged = access_path is not None or kv_shards > 1
         shared = manager = None
+        prefix = prefix_pages if prefix_share else 0
+        total = replicas * (batch_slots + prefix)
         if paged:
             if access_path is None:
                 access_path = "xdma"
-            total = replicas * batch_slots
             page_bytes = page_bytes_for(cfg, max_len)
+            # the fabric is sized in *physical* (codec-encoded) bytes —
+            # the capacity the compression actually buys (§12) — and
+            # carries each replica's shared-prefix base pool past every
+            # replica's per-slot page range
+            codec_obj = page_codec_for(cfg, max_len, kv_codec)
+            phys_bytes = codec_obj.encoded_bytes if codec_obj is not None \
+                else page_bytes
             if kv_shards > 1:
                 from repro.access.registry import create_path
                 from repro.fabric import FabricManager
                 shared = create_path(
                     "fabric", member=access_path, shards=kv_shards,
                     replicas=kv_replicas, n_pages=total,
-                    page_bytes=page_bytes, n_channels=2, n_nodes=1,
+                    page_bytes=phys_bytes, n_channels=2, n_nodes=1,
                     doorbell_batch=kv_doorbell,
                     node_latency_s=kv_node_latency_s, retry=kv_retry,
                     integrity=kv_integrity)
@@ -388,7 +401,7 @@ class FleetRouter:
                         "and kv_replicas >= 2")
                 from repro.access.registry import create_path
                 shared = create_path(
-                    access_path, n_pages=total, page_bytes=page_bytes,
+                    access_path, n_pages=total, page_bytes=phys_bytes,
                     n_channels=2, n_nodes=1, doorbell_batch=kv_doorbell,
                     node_latency_s=kv_node_latency_s)
         engines = []
@@ -399,9 +412,13 @@ class FleetRouter:
                 kv_retry=kv_retry, kv_integrity=kv_integrity,
                 admission=mk_adm(), shared_path=shared,
                 page_base=i * batch_slots,
-                total_pages=replicas * batch_slots if shared is not None
-                else None,
-                fused_install=fused_install, name=f"replica{i}"))
+                total_pages=total if shared is not None else None,
+                fused_install=fused_install, kv_codec=kv_codec,
+                prefix_share=prefix_share, prefix_pages=prefix_pages,
+                prefix_base=(replicas * batch_slots + i * prefix)
+                if (shared is not None and prefix) else None,
+                kv_capacity_bytes=kv_capacity_bytes,
+                name=f"replica{i}"))
         return cls(engines, fabric=shared if kv_shards > 1 else None,
                    manager=manager, kv_kill_step=kv_kill_step,
                    kill_replica_at=kill_replica_at,

@@ -281,11 +281,19 @@ class TenantSpec:
     priority: int = 0               # higher admits first
     quota_tokens: Optional[int] = None   # in-flight token cap
     slo_ttft_s: Optional[float] = None   # per-tenant TTFT deadline
+    # shared-prefix traffic (DESIGN.md §12): a fraction ``share_ratio``
+    # of this tenant's requests open with the tenant's fixed
+    # ``system_prompt_len``-token system prompt; the engine dedups
+    # those requests' KV pages against one shared base
+    system_prompt_len: int = 0
+    share_ratio: float = 0.0
 
 
 def default_tenants(n: int, max_len: int,
                     quota_tokens: Optional[int] = None,
-                    slo_ttft_s: Optional[float] = None
+                    slo_ttft_s: Optional[float] = None,
+                    system_prompt_len: int = 0,
+                    share_ratio: float = 0.0
                     ) -> List[TenantSpec]:
     """N tenants round-robin over the zoo, tiered priorities: tenant 0
     is the paying interactive class (highest priority), later tenants
@@ -299,7 +307,9 @@ def default_tenants(n: int, max_len: int,
             weight=1.0,
             priority=max(0, n - 1 - i),
             quota_tokens=quota_tokens,
-            slo_ttft_s=slo_ttft_s))
+            slo_ttft_s=slo_ttft_s,
+            system_prompt_len=system_prompt_len,
+            share_ratio=share_ratio))
     return out
 
 
@@ -319,6 +329,8 @@ class ArrivalEvent:
     prompt_len: int
     max_new: int
     deadline_s: Optional[float]
+    prefix_len: int = 0         # leading tokens from the tenant's
+    #                             fixed system prompt (0 = unshared)
 
 
 class Workload:
@@ -350,14 +362,23 @@ class Workload:
         picks = rng_assign.choice(len(self.tenants), size=n_requests, p=w)
         shape_rngs = [_stream(self.seed, f"shape:{t.name}")
                       for t in self.tenants]
+        # share decisions draw from NEW per-tenant streams, so turning
+        # sharing off (the default) leaves every legacy stream — and the
+        # whole schedule — byte-identical
+        share_rngs = [_stream(self.seed, f"share:{t.name}")
+                      for t in self.tenants]
         events = []
         for rid, (t, k) in enumerate(zip(times, picks)):
             ten = self.tenants[k]
             p, d = ten.mix.draw(shape_rngs[k], self.max_len)
+            pfx = 0
+            if ten.system_prompt_len > 0 and ten.share_ratio > 0.0 and \
+                    share_rngs[k].random() < ten.share_ratio:
+                pfx = min(ten.system_prompt_len, p)
             events.append(ArrivalEvent(
                 t=float(t), rid=rid, tenant=ten.name,
                 priority=ten.priority, prompt_len=p, max_new=d,
-                deadline_s=ten.slo_ttft_s))
+                deadline_s=ten.slo_ttft_s, prefix_len=pfx))
         return events
 
     def requests(self, events: Sequence[ArrivalEvent],
@@ -366,12 +387,26 @@ class Workload:
         from one per-workload stream so rid k's prompt is stable even if
         the event list is filtered or re-ordered upstream."""
         rng = _stream(self.seed, "prompts")
+        sys_prompts = {}
         out = []
         for ev in events:
             prompt = rng.integers(0, vocab, size=ev.prompt_len,
                                   dtype=np.int32)
+            if ev.prefix_len > 0:
+                # overwrite the head with the tenant's fixed system
+                # prompt (its own stream, drawn once per tenant): the
+                # tail stays rid-stable, prompt length is unchanged,
+                # and prefix_len=0 events are untouched bytes
+                sp = sys_prompts.get(ev.tenant)
+                if sp is None:
+                    sp = _stream(self.seed, f"sysprompt:{ev.tenant}") \
+                        .integers(0, vocab, size=self.max_len,
+                                  dtype=np.int32)
+                    sys_prompts[ev.tenant] = sp
+                prompt[:ev.prefix_len] = sp[:ev.prefix_len]
             req = Request(rid=ev.rid, prompt=prompt, max_new=ev.max_new,
                           tenant=ev.tenant, priority=ev.priority,
-                          deadline_s=ev.deadline_s, t_arrival=ev.t)
+                          deadline_s=ev.deadline_s, t_arrival=ev.t,
+                          prefix_len=ev.prefix_len)
             out.append((ev.t, req))
         return out
